@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: paper workloads at configurable scale,
+platform models, CSV emission."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import algorithms as A
+from repro.core import graph as G
+from repro.core import power as PW
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", 1.0 / 256))
+
+ALGOS = ["sssp", "bfs", "pagerank", "cc", "minitri", "dfs"]
+GRAPH_NAMES = ["ca", "fb", "lj"]
+
+
+def load_graphs(scale: float = SCALE):
+    return {name: G.make_paper_graph(name, scale=scale, seed=7)
+            for name in GRAPH_NAMES}
+
+
+def run_algo(g, algo: str, mode: str, b: int = 16, num_clusters: int = 64):
+    t0 = time.time()
+    if algo == "sssp":
+        r = A.sssp(g, 0, mode=mode, b=b, num_clusters=num_clusters)
+    elif algo == "bfs":
+        r = A.bfs(g, 0, mode=mode, b=b, num_clusters=num_clusters)
+    elif algo == "pagerank":
+        r = A.pagerank(g, tol=1e-7, mode=mode, b=b,
+                       num_clusters=num_clusters)
+    elif algo == "cc":
+        r = A.connected_components(g, mode=mode, b=b,
+                                   num_clusters=num_clusters)
+    elif algo == "minitri":
+        r = A.minitri(g)
+    elif algo == "dfs":
+        r = A.dfs(g, 0)
+    else:
+        raise ValueError(algo)
+    wall = time.time() - t0
+    return r, wall
+
+
+def platform_reports(g, algo: str, b: int = 16, num_clusters: int = 64):
+    """(nale, cpu, gpu) PlatformReports for one (graph, algorithm)."""
+    ra, wall_a = run_algo(g, algo, "async", b, num_clusters)
+    if algo in ("minitri", "dfs"):
+        rs, wall_s = ra, wall_a  # one-shot / sequential: same schedule
+    else:
+        rs, wall_s = run_algo(g, algo, "sync", b, num_clusters)
+    prep = ra.prepared
+    if prep is None:  # minitri / dfs have no BSR image; synthesize one
+        from repro.core import engine as eng
+        prep = eng.prepare(g, "min_plus", b=b, num_clusters=num_clusters)
+    k_pad = max(float(np.diff(g.indptr).max()), 1.0)
+    nale = PW.model_nale(prep, ra.stats)
+    cpu = PW.model_cpu(prep, ra.stats)
+    gpu = PW.model_gpu(prep, rs.stats, k_max_pad=k_pad,
+                       avg_degree=g.avg_degree)
+    return dict(nale=nale, cpu=cpu, gpu=gpu, async_stats=ra.stats,
+                sync_stats=rs.stats, wall_async=wall_a, wall_sync=wall_s)
+
+
+def csv_line(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,40 @@
+"""Paper Fig. 5 — execution time (cycles) per platform × graph ×
+algorithm, on statistically matched stand-in graphs (offline container;
+see DESIGN.md §2 assumption 3).  The NALE/CPU/GPU numbers are MODELED
+cycles from the analytical models in core/power.py, driven by the work
+counters the engines MEASURE."""
+
+from __future__ import annotations
+
+from . import common
+
+
+def run(graphs=None, emit=common.csv_line):
+    graphs = graphs or common.load_graphs()
+    rows = []
+    for gname, g in graphs.items():
+        for algo in common.ALGOS:
+            rep = common.platform_reports(g, algo)
+            nale, cpu, gpu = rep["nale"], rep["cpu"], rep["gpu"]
+            speedup_cpu = cpu.time_s / max(nale.time_s, 1e-12)
+            speedup_gpu = gpu.time_s / max(nale.time_s, 1e-12)
+            emit(f"fig5/{gname}/{algo}/nale_cycles",
+                 rep["wall_async"] * 1e6,
+                 f"cycles={nale.cycles:.3g}")
+            emit(f"fig5/{gname}/{algo}/cpu_cycles", 0.0,
+                 f"cycles={cpu.cycles:.3g}")
+            emit(f"fig5/{gname}/{algo}/gpu_cycles", 0.0,
+                 f"cycles={gpu.cycles:.3g}")
+            emit(f"fig5/{gname}/{algo}/speedup", 0.0,
+                 f"vs_cpu={speedup_cpu:.1f}x vs_gpu={speedup_gpu:.1f}x")
+            rows.append(dict(graph=gname, algo=algo,
+                             nale_cycles=nale.cycles,
+                             cpu_cycles=cpu.cycles,
+                             gpu_cycles=gpu.cycles,
+                             speedup_cpu=speedup_cpu,
+                             speedup_gpu=speedup_gpu,
+                             sweeps_async=rep["async_stats"].sweeps,
+                             sweeps_sync=rep["sync_stats"].sweeps,
+                             edge_work_async=rep["async_stats"].edge_work,
+                             edge_work_sync=rep["sync_stats"].edge_work))
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 6 — power per platform × graph × algorithm (modeled energy
+over modeled time; constants documented in core/power.py)."""
+
+from __future__ import annotations
+
+from . import common
+
+
+def run(graphs=None, emit=common.csv_line):
+    graphs = graphs or common.load_graphs()
+    rows = []
+    for gname, g in graphs.items():
+        for algo in common.ALGOS:
+            rep = common.platform_reports(g, algo)
+            nale, cpu, gpu = rep["nale"], rep["cpu"], rep["gpu"]
+            eff_gpu = (nale.perf_per_watt
+                       / max(gpu.perf_per_watt, 1e-12))
+            emit(f"fig6/{gname}/{algo}/power_w", 0.0,
+                 f"nale={nale.power_w:.2f} cpu={cpu.power_w:.2f} "
+                 f"gpu={gpu.power_w:.2f}")
+            emit(f"fig6/{gname}/{algo}/perfW_vs_gpu", 0.0,
+                 f"{eff_gpu:.1f}x")
+            rows.append(dict(graph=gname, algo=algo,
+                             nale_w=nale.power_w, cpu_w=cpu.power_w,
+                             gpu_w=gpu.power_w,
+                             nale_j=nale.energy_j, cpu_j=cpu.energy_j,
+                             gpu_j=gpu.energy_j,
+                             perf_per_watt_vs_gpu=eff_gpu))
+    return rows

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: bsr_spmv (ref XLA path wall-clock on CPU —
+the Pallas path is TPU-target, validated in interpret mode by tests) and
+flash-attention reference, plus modeled TPU roofline per kernel call."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core import graph as G
+
+from . import common
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(graphs=None, emit=common.csv_line):
+    from repro.kernels import ops
+    rows = []
+    g = G.rmat(4096, 32768, seed=3)
+    p = eng.prepare(g, "plus_times", b=32, num_clusters=64,
+                    normalize="out_stochastic")
+    x = jnp.asarray(np.random.default_rng(0)
+                    .random((p.r_pad, p.b)).astype(np.float32))
+
+    def spmv(xv):
+        return ops.bsr_spmv(p.vals, p.cols, p.nnz, xv,
+                            semiring="plus_times", impl="ref")
+
+    jspmv = jax.jit(spmv)
+    dt = _time(lambda xv: jspmv(xv), x)
+    flops = 2.0 * p.tiles_total * p.b * p.b
+    emit("kernel/bsr_spmv_ref_cpu", dt * 1e6,
+         f"gflops={flops/dt/1e9:.2f} tiles={int(p.tiles_total)}")
+    # modeled TPU: tiles stream HBM→VMEM at 819 GB/s; MXU does the MACs
+    tile_bytes = p.tiles_total * p.b * p.b * 4
+    t_mem = tile_bytes / 819e9
+    t_mxu = flops / 197e12
+    emit("kernel/bsr_spmv_tpu_model", 0.0,
+         f"t_mem_us={t_mem*1e6:.1f} t_mxu_us={t_mxu*1e6:.2f} "
+         f"bound={'memory' if t_mem > t_mxu else 'compute'}")
+    rows.append(dict(kernel="bsr_spmv", cpu_us=dt * 1e6,
+                     gflops=flops / dt / 1e9,
+                     tpu_t_mem_us=t_mem * 1e6, tpu_t_mxu_us=t_mxu * 1e6))
+
+    b, h, s, d = 1, 8, 2048, 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.bfloat16)
+    att = jax.jit(lambda q, k, v: ops.attention(q, k, v, causal=True))
+    dt = _time(lambda a, b_, c: att(a, b_, c), q, k, v)
+    aflops = 4.0 * b * h * s * s / 2 * d
+    emit("kernel/attention_ref_cpu", dt * 1e6,
+         f"gflops={aflops/dt/1e9:.2f}")
+    rows.append(dict(kernel="attention", cpu_us=dt * 1e6,
+                     gflops=aflops / dt / 1e9))
+    return rows

@@ -1,0 +1,68 @@
+"""LM substrate microbench: reduced-config train-step and decode-step
+wall clock on CPU (harness completeness; real perf numbers come from the
+dry-run roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.train.optimizer import AdamW, warmup_cosine
+from repro.train.step import make_train_step
+
+from . import common
+
+
+def run(graphs=None, emit=common.csv_line):
+    rows = []
+    for arch in ("granite-3-2b", "rwkv6-1.6b", "dbrx-132b"):
+        cfg = get_config(arch).reduced()
+        params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        b, s = 4, 128
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "loss_mask": jnp.ones((b, s), jnp.float32)}
+        opt = AdamW(lr=warmup_cosine(1e-3, 2, 100))
+        step = jax.jit(make_train_step(cfg, opt))
+        st = opt.init(params)
+        p, st, m = step(params, st, batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        n = 5
+        for _ in range(n):
+            p, st, m = step(p, st, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.time() - t0) / n
+        tput = b * s / dt
+        emit(f"lm/train_step/{arch}", dt * 1e6,
+             f"tokens_per_s={tput:.0f}")
+        rows.append(dict(arch=arch, what="train", us=dt * 1e6,
+                         tokens_per_s=tput))
+
+        logits, cache = jax.jit(lambda pp, bt: lm.prefill(
+            cfg, pp, bt, cache_len=s + 16))(
+                p, {k: v for k, v in batch.items() if k == "tokens"})
+        dstep = jax.jit(lambda pp, c, t, pos: lm.decode_step(
+            cfg, pp, c, t, pos))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        lg, cache = dstep(p, cache, tok, jnp.int32(s))
+        jax.block_until_ready(lg)
+        t0 = time.time()
+        for i in range(8):
+            lg, cache = dstep(p, cache, tok, jnp.int32(s + 1 + i))
+        jax.block_until_ready(lg)
+        dt = (time.time() - t0) / 8
+        emit(f"lm/decode_step/{arch}", dt * 1e6,
+             f"tokens_per_s={b/dt:.0f}")
+        rows.append(dict(arch=arch, what="decode", us=dt * 1e6,
+                         tokens_per_s=b / dt))
+    _ = common
+    return rows

@@ -1,0 +1,78 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines, then a summary that checks
+the paper's headline claims:
+  * 10–20× speedup vs a comparable CPU (modeled cycles, Fig. 5)
+  * 2–5× better power efficiency vs a GPU (modeled, Fig. 6)
+and the directly MEASURED async-vs-sync work reduction the claims rest on.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 1/256] [--json out]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from . import async_vs_sync, common, fig5_cycles, fig6_power, \
+    kernel_bench, lm_bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=common.SCALE,
+                    help="fraction of full paper graph size (default "
+                         "1/256; 1.0 = paper scale)")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["fig5", "fig6", "avs", "kernel", "lm"])
+    args = ap.parse_args()
+
+    graphs = common.load_graphs(args.scale)
+    for name, g in graphs.items():
+        common.csv_line(f"graph/{name}", 0.0,
+                        f"n={g.n} nnz={g.nnz} avg_deg={g.avg_degree:.2f}")
+
+    out = {}
+    if "fig5" not in args.skip:
+        out["fig5"] = fig5_cycles.run(graphs)
+    if "fig6" not in args.skip:
+        out["fig6"] = fig6_power.run(graphs)
+    if "avs" not in args.skip:
+        out["async_vs_sync"] = async_vs_sync.run(graphs)
+    if "kernel" not in args.skip:
+        out["kernel"] = kernel_bench.run(graphs)
+    if "lm" not in args.skip:
+        out["lm"] = lm_bench.run(graphs)
+
+    # --- paper-claim summary -------------------------------------------
+    if "fig5" in out:
+        par = [r for r in out["fig5"] if r["algo"] not in ("dfs",)]
+        sp = np.array([r["speedup_cpu"] for r in par])
+        gp = [r["perf_per_watt_vs_gpu"] for r in out.get("fig6", [])
+              if r["algo"] not in ("dfs",)]
+        print("\n== paper-claim check (modeled; constants in "
+              "core/power.py) ==")
+        print(f"speedup vs CPU  : geomean {np.exp(np.log(sp).mean()):.1f}x"
+              f"  range [{sp.min():.1f}, {sp.max():.1f}]  "
+              f"(paper: 10-20x)")
+        if gp:
+            gp = np.array(gp)
+            print(f"perf/W vs GPU   : geomean "
+                  f"{np.exp(np.log(gp).mean()):.1f}x  "
+                  f"range [{gp.min():.1f}, {gp.max():.1f}]  (paper: 2-5x)")
+    if "async_vs_sync" in out:
+        wr = [r["work_reduction"] for r in out["async_vs_sync"]
+              if "work_reduction" in r]
+        print(f"async work reduction (measured): geomean "
+              f"{np.exp(np.log(wr).mean()):.2f}x over bulk-synchronous")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1, default=float)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,35 @@
+"""Graph analytics sweep — the paper's six algorithms on all three
+workloads with the platform models; a compact reproduction of Fig. 5/6.
+
+  PYTHONPATH=src python examples/graph_analytics.py [--scale 0.004]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, ".")  # allow running from repo root
+
+from benchmarks import common  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1 / 512)
+    args = ap.parse_args()
+    graphs = common.load_graphs(args.scale)
+    hdr = (f"{'graph':5s} {'algo':9s} {'NALE cyc':>11s} {'CPU cyc':>11s} "
+           f"{'GPU cyc':>11s} {'vsCPU':>7s} {'perf/W vs GPU':>14s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for gname, g in graphs.items():
+        for algo in common.ALGOS:
+            rep = common.platform_reports(g, algo)
+            nale, cpu, gpu = rep["nale"], rep["cpu"], rep["gpu"]
+            print(f"{gname:5s} {algo:9s} {nale.cycles:11.3g} "
+                  f"{cpu.cycles:11.3g} {gpu.cycles:11.3g} "
+                  f"{cpu.time_s/nale.time_s:6.1f}x "
+                  f"{nale.perf_per_watt/gpu.perf_per_watt:13.1f}x")
+
+
+if __name__ == "__main__":
+    main()

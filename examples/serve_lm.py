@@ -1,0 +1,41 @@
+"""Serving example: continuous batching with slot reuse on a reduced
+config — 12 requests through 4 decode slots, verified against the static
+batch path.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeLoop, generate
+
+cfg = get_config("granite-3-2b").reduced()
+params, _ = lm.init(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+prompts = rng.integers(2, cfg.vocab_size, (12, 12)).astype(np.int32)
+
+# static batch reference for the first 4
+t0 = time.time()
+static = generate(cfg, params, prompts[:4], max_new_tokens=8)
+print(f"static batch of 4: {time.time()-t0:.1f}s")
+
+sl = ServeLoop(cfg, params, num_slots=4, cache_len=40)
+reqs = [Request(rid=i, prompt=prompts[i], max_new=8) for i in range(12)]
+for r in reqs:
+    sl.submit(r)
+t0 = time.time()
+steps = sl.run()
+dt = time.time() - t0
+tput = sum(len(r.generated) for r in reqs) / dt
+print(f"continuous batching: 12 requests / 4 slots in {steps} decode "
+      f"steps, {tput:.1f} tok/s")
+for i in range(4):
+    assert reqs[i].generated == static[i, 12:].tolist(), i
+print("slot outputs match the static path — KV-cache slot surgery is "
+      "exact.")

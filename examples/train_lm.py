@@ -1,0 +1,61 @@
+"""End-to-end training driver example: a ~100M-parameter dense LM
+(granite family scaled to d=768/L=12, GPT-2-small class) trained for a
+few hundred steps on the synthetic corpus, with checkpointing and an
+injected failure + automatic restart to demonstrate fault tolerance.
+
+  PYTHONPATH=src python examples/train_lm.py            # full (~100M)
+  PYTHONPATH=src python examples/train_lm.py --quick    # CI-sized
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.train.loop import TrainArgs, train_with_restarts
+
+
+def model_100m():
+    base = get_config("granite-3-2b")
+    return dataclasses.replace(
+        base, name="granite-100m", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=3072,
+        vocab_size=32768, tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.quick:
+        cfg = get_config("granite-3-2b").reduced()
+        targs = TrainArgs(steps=60, batch_size=8, seq_len=64, lr=2e-3,
+                          warmup=5, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=20, log_every=10, fail_at_step=35)
+    else:
+        cfg = model_100m()
+        targs = TrainArgs(steps=args.steps, batch_size=args.batch,
+                          seq_len=args.seq, lr=6e-4, warmup=30,
+                          ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                          log_every=10, fail_at_step=args.steps // 2)
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  ~{n/1e6:.0f}M params; injecting a failure "
+          f"at step {targs.fail_at_step} (auto-restart from checkpoint)")
+    out = train_with_restarts(cfg, targs)
+    h = out["history"]
+    print(f"\nrestarts: {out['restarts']}")
+    print("loss curve:")
+    for m in h:
+        print(f"  step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"ppl {m.get('ppl', float('nan')):.1f}")
+    assert h[-1]["loss"] < h[0]["loss"]
+    print("loss decreased through a failure+restart — fault-tolerant "
+          "training works.")
+
+
+if __name__ == "__main__":
+    main()

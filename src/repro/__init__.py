@@ -1,0 +1,6 @@
+"""repro — asynchronous graph-processor architecture (Kinsy et al. 2017)
+as a production multi-pod JAX framework.  See DESIGN.md.
+
+NOTE: this package must stay import-light (no jax device init at import
+time) — launch/dryrun.py sets XLA_FLAGS before first jax use.
+"""

@@ -1,0 +1,2 @@
+from .checkpoint import (latest_step, restore, save,
+                         wait_for_async_saves)  # noqa: F401

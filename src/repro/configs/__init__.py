@@ -1,0 +1,2 @@
+from .base import (ARCH_IDS, ModelConfig, all_configs, get_config,
+                   register)  # noqa: F401

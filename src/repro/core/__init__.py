@@ -1,0 +1,13 @@
+# The paper's primary contribution: an asynchronous graph-processing
+# architecture, adapted TPU-natively (see DESIGN.md §2).
+#   graph/cluster  — Fig.4 compile-time steps 1–4 (topology → clusters →
+#                    dependencies → placement)
+#   semiring       — the NALE MAC/comparator datapath algebra
+#   engine         — sync (BSP) vs async (cluster-dataflow, Gauss-Seidel)
+#   algorithms     — SSSP, BFS, DFS, PageRank, MiniTri, CC
+#   isa/compile    — the specialized ISA + step-5 codegen
+#   power          — cycle & energy models for NALE / CPU / GPU classes
+#   placement      — multi-device halo-exchange engine (shard_map)
+
+from . import algorithms, cluster, compile, engine, graph, isa, oracles, \
+    placement, power, semiring  # noqa: F401

@@ -1,0 +1,343 @@
+"""Graph execution engines — the paper's model of computation, in JAX.
+
+Two engines over the same clustered BSR substrate:
+
+  * ``run_sync``  — bulk-synchronous (Jacobi): every sweep processes every
+    tile against last sweep's values.  This is the conventional
+    global-clock execution the paper argues against; it is the CPU/GPU
+    baseline semantics.
+
+  * ``run_async`` — the paper's asynchronous model, adapted to TPU (see
+    DESIGN.md §2): clusters are processed along the dependency schedule;
+    each cluster (a) *skips* entirely when none of its inputs changed —
+    self-timed, work ∝ data readiness — and (b) reads the *freshest*
+    values, including ones produced earlier in the same sweep
+    (Gauss-Seidel), the software analogue of values flowing through NALE
+    FIFOs as soon as they are produced rather than at a global barrier.
+
+Both engines emit work counters (tiles, edges, per-sweep critical path,
+halo traffic) that feed the cycle/energy models in ``power.py`` and the
+ISA-level accounting in ``compile.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import semiring as sr
+from .cluster import Clustering, cluster_graph, identity_clustering
+from .graph import Graph, to_bsr
+from ..kernels import ops
+
+
+@dataclasses.dataclass
+class Prepared:
+    """Clustered, permuted, device-resident graph + engine metadata."""
+
+    # device arrays
+    vals: jnp.ndarray       # (r_pad, K, B, B) f32
+    cols: jnp.ndarray       # (r_pad, K) i32
+    nnz: jnp.ndarray        # (r_pad,) i32
+    valid: jnp.ndarray      # (r_pad, B) bool — real (non-padding) vertices
+    dangling: jnp.ndarray   # (r_pad, B) bool — zero-outdegree vertices
+    group_tiles: jnp.ndarray  # (S,) f32
+    group_edges: jnp.ndarray  # (S,) f32
+    group_ext_tiles: jnp.ndarray  # (S,) f32 — tiles reading outside group
+    # host metadata
+    n: int
+    b: int
+    r_pad: int
+    k_max: int
+    gb: int                 # row-blocks per group ("cluster" at engine level)
+    s: int                  # number of groups
+    semiring: str
+    perm: np.ndarray        # old id -> new id
+    inv_perm: np.ndarray    # new id -> old id
+    clustering: Clustering
+    tiles_total: float = 0.0
+    edges_total: float = 0.0
+
+    def to_blocks(self, x_flat: np.ndarray, pad: float) -> jnp.ndarray:
+        """(n,) values in OLD ids → (r_pad, B) block layout in new ids."""
+        out = np.full(self.r_pad * self.b, pad, dtype=np.float32)
+        out[self.perm] = x_flat
+        return jnp.asarray(out.reshape(self.r_pad, self.b))
+
+    def from_blocks(self, xb: jnp.ndarray) -> np.ndarray:
+        """(r_pad, B) block layout → (n,) values in OLD ids."""
+        flat = np.asarray(xb).reshape(-1)
+        return flat[self.perm]
+
+
+def prepare(g: Graph, semiring_name: str, b: int = 32,
+            num_clusters: Optional[int] = None, pull: bool = True,
+            clustered: bool = True, normalize: Optional[str] = None,
+            seed: int = 0) -> Prepared:
+    """Paper Fig. 4 steps 1–5: profile/extract → cluster → analyze →
+    place → build the device BSR image.
+
+    pull=True computes over in-edges (y_i = ⊕_j A[j→i] ⊗ x_j), the natural
+    direction for relaxation/propagation algorithms.
+    normalize="out_stochastic": edge j→i gets weight 1/outdeg(j) (PageRank).
+    """
+    ring = sr.get(semiring_name)
+    n = g.n
+    if normalize == "out_stochastic":
+        outdeg = np.maximum(np.diff(g.indptr), 1)
+        w = (1.0 / outdeg)[np.repeat(np.arange(n), np.diff(g.indptr))]
+        g = Graph(n=n, indptr=g.indptr, indices=g.indices,
+                  weights=w.astype(np.float32))
+    num_clusters = num_clusters or max(1, min(64, n // max(b, 1)))
+    c = (cluster_graph(g, num_clusters, seed=seed) if clustered
+         else identity_clustering(g, num_clusters))
+    g2 = g.permute(c.perm.astype(np.int32))
+    gm = g2.transpose() if pull else g2
+    bsr = to_bsr(gm, b, pad_value=float(ring.zero))
+
+    # group (engine-level cluster) geometry: contiguous row-block ranges
+    s = min(c.num_clusters, bsr.r)
+    gb = (bsr.r + s - 1) // s
+    r_pad = s * gb
+    k = bsr.k_max
+    vals = np.full((r_pad, k, b, b), float(ring.zero), dtype=np.float32)
+    cols = np.zeros((r_pad, k), dtype=np.int32)
+    nnz = np.zeros(r_pad, dtype=np.int32)
+    vals[: bsr.r] = bsr.block_vals
+    cols[: bsr.r] = bsr.block_cols
+    nnz[: bsr.r] = bsr.block_nnz
+
+    valid = np.zeros((r_pad, b), dtype=bool)
+    valid.reshape(-1)[: n] = True  # permuted ids are 0..n-1
+    outdeg0 = np.zeros(r_pad * b, dtype=np.int64)
+    outdeg0[: n] = np.diff(g2.indptr)
+    dangling = valid & (outdeg0.reshape(r_pad, b) == 0)
+
+    grp = np.arange(r_pad) // gb
+    group_tiles = np.zeros(s, dtype=np.float64)
+    np.add.at(group_tiles, grp, nnz)
+    group_edges = np.zeros(s, dtype=np.float64)
+    edge_nnz = np.zeros(r_pad, dtype=np.float64)
+    edge_nnz[: bsr.r] = bsr.edge_nnz
+    np.add.at(group_edges, grp, edge_nnz)
+    # halo: tiles whose source col-block lives outside the group row range
+    ext = ((cols // gb) != grp[:, None]) & \
+          (np.arange(k)[None, :] < nnz[:, None])
+    group_ext_tiles = np.zeros(s, dtype=np.float64)
+    np.add.at(group_ext_tiles, grp, ext.sum(axis=1))
+
+    return Prepared(
+        vals=jnp.asarray(vals), cols=jnp.asarray(cols), nnz=jnp.asarray(nnz),
+        valid=jnp.asarray(valid), dangling=jnp.asarray(dangling),
+        group_tiles=jnp.asarray(group_tiles, jnp.float32),
+        group_edges=jnp.asarray(group_edges, jnp.float32),
+        group_ext_tiles=jnp.asarray(group_ext_tiles, jnp.float32),
+        n=n, b=b, r_pad=r_pad, k_max=k, gb=gb, s=s,
+        semiring=semiring_name, perm=np.asarray(c.perm),
+        inv_perm=np.argsort(np.asarray(c.perm)), clustering=c,
+        tiles_total=float(nnz.sum()), edges_total=float(edge_nnz.sum()))
+
+
+# ---------------------------------------------------------------------------
+# apply / convergence rules
+# ---------------------------------------------------------------------------
+
+
+def _apply(apply_kind: str, ring: sr.Semiring, y, xg, valid_g, damping,
+           inv_n, tol):
+    """Returns (x_new, improved_rows) for one block of rows.
+
+    Note: PageRank uses dangling-drop semantics (no global dangling-mass
+    redistribution; the result is L1-renormalized by the caller).  This
+    keeps the update *edge-local*, which the asynchronous model requires —
+    a global scalar input would invalidate cluster-level data-readiness
+    tracking (and is exactly the kind of global synchronization the paper's
+    architecture removes).
+    """
+    if apply_kind == "relax":
+        x_new = ring.add(y, xg)
+        imp = ring.improves(x_new, xg)
+    elif apply_kind == "pagerank":
+        x_new = (1.0 - damping) * inv_n + damping * y
+        x_new = jnp.where(valid_g, x_new, 0.0)
+        imp = jnp.abs(x_new - xg) > tol
+    elif apply_kind == "identity":
+        x_new = jnp.where(valid_g, y, xg)
+        imp = ring.improves(x_new, xg)
+    else:
+        raise ValueError(apply_kind)
+    x_new = jnp.where(valid_g, x_new, xg)
+    imp = imp & valid_g
+    return x_new, imp
+
+
+@dataclasses.dataclass
+class RunStats:
+    sweeps: int
+    converged: bool
+    tile_work: float          # tiles actually combined
+    edge_work: float          # true edges behind those tiles
+    crit_tiles: float         # Σ_sweeps max_cluster(active tiles) — NALE critical path
+    active_group_sweeps: float
+    halo_tiles: float         # inter-cluster tile reads (FIFO/ICI traffic)
+    total_groups: int
+    mode: str
+
+
+# ---------------------------------------------------------------------------
+# synchronous (BSP / Jacobi) engine
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "semiring_name", "apply_kind", "max_sweeps", "impl"))
+def _sync_loop(vals, cols, nnz, valid, dangling, x0, damping, tol, inv_n,
+               semiring_name, apply_kind, max_sweeps, impl):
+    ring = sr.get(semiring_name)
+
+    def cond(st):
+        i, x, done = st
+        return (~done) & (i < max_sweeps)
+
+    def body(st):
+        i, x, _ = st
+        y = ops.bsr_spmv(vals, cols, nnz, x, semiring=semiring_name,
+                         impl=impl)
+        x_new, imp = _apply(apply_kind, ring, y, x, valid, damping, inv_n,
+                            tol)
+        return i + 1, x_new, ~jnp.any(imp)
+
+    i, x, done = jax.lax.while_loop(cond, body, (jnp.int32(0), x0, False))
+    return i, x, done
+
+
+def run_sync(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
+             damping: float = 0.85, tol: float = 1e-6,
+             max_sweeps: int = 10_000, impl: str = "ref"
+             ) -> Tuple[jnp.ndarray, RunStats]:
+    inv_n = jnp.float32(1.0 / max(p.n, 1))
+    i, x, done = _sync_loop(p.vals, p.cols, p.nnz, p.valid, p.dangling, x0,
+                            jnp.float32(damping), jnp.float32(tol), inv_n,
+                            p.semiring, apply_kind, max_sweeps, impl)
+    sweeps = int(i)
+    stats = RunStats(
+        sweeps=sweeps, converged=bool(done),
+        tile_work=p.tiles_total * sweeps,
+        edge_work=p.edges_total * sweeps,
+        crit_tiles=float(np.max(np.asarray(p.group_tiles))) * sweeps,
+        active_group_sweeps=float(p.s * sweeps),
+        halo_tiles=float(np.asarray(p.group_ext_tiles).sum()) * sweeps,
+        total_groups=p.s, mode="sync")
+    return x, stats
+
+
+# ---------------------------------------------------------------------------
+# asynchronous (cluster-dataflow, Gauss-Seidel) engine
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "semiring_name", "apply_kind", "max_sweeps", "gb", "s"))
+def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
+                group_ext, x0, changed0, damping, tol, inv_n,
+                semiring_name, apply_kind, max_sweeps, gb, s):
+    ring = sr.get(semiring_name)
+    k = cols.shape[1]
+    lane = jnp.arange(k)[None, :]
+
+    # apply kinds with a bias term (PageRank's (1-d)/n) must touch every
+    # cluster at least once even if it has no in-edges.
+    first_touch = apply_kind == "pagerank"
+
+    def sweep_step(carry, sidx):
+        x, ch_prev, ch_next, ran, counters = carry
+        row0 = sidx * gb
+        vals_g = jax.lax.dynamic_slice_in_dim(vals, row0, gb, 0)
+        cols_g = jax.lax.dynamic_slice_in_dim(cols, row0, gb, 0)
+        nnz_g = jax.lax.dynamic_slice_in_dim(nnz, row0, gb, 0)
+        # data readiness: any live input tile whose source block changed —
+        # either last sweep (ch_prev) or earlier THIS sweep (ch_next, the
+        # Gauss-Seidel freshness path).
+        ch = ch_prev | ch_next
+        live = lane < nnz_g[:, None]
+        active = jnp.any(ch[cols_g] & live)
+        if first_touch:
+            active = active | ~ran[sidx]
+
+        def do(args):
+            x, ch_next = args
+            y = ops.bsr_spmv(vals_g, cols_g, nnz_g, x,
+                             semiring=semiring_name, impl="ref")
+            xg = jax.lax.dynamic_slice_in_dim(x, row0, gb, 0)
+            vg = jax.lax.dynamic_slice_in_dim(valid, row0, gb, 0)
+            x_new, imp = _apply(apply_kind, ring, y, xg, vg, damping,
+                                inv_n, tol)
+            x = jax.lax.dynamic_update_slice_in_dim(x, x_new, row0, 0)
+            imp_rows = jnp.any(imp, axis=1)
+            ch_next = jax.lax.dynamic_update_slice_in_dim(
+                ch_next, imp_rows, row0, 0)
+            return x, ch_next
+
+        x, ch_next = jax.lax.cond(active, do, lambda a: a, (x, ch_next))
+        ran = ran.at[sidx].set(ran[sidx] | active)
+        af = active.astype(jnp.float32)
+        counters = dict(
+            counters,
+            tile_work=counters["tile_work"] + af * group_tiles[sidx],
+            edge_work=counters["edge_work"] + af * group_edges[sidx],
+            halo=counters["halo"] + af * group_ext[sidx],
+            active=counters["active"] + af,
+            sweep_max=jnp.maximum(counters["sweep_max"],
+                                  af * group_tiles[sidx]))
+        return (x, ch_prev, ch_next, ran, counters), None
+
+    def cond(st):
+        i, x, ch, ran, done, _ = st
+        return (~done) & (i < max_sweeps)
+
+    def body(st):
+        i, x, ch_prev, ran, _, counters = st
+        counters = dict(counters, sweep_max=jnp.float32(0.0))
+        ch_next = jnp.zeros_like(ch_prev)
+        (x, _, ch_next, ran, counters), _ = jax.lax.scan(
+            sweep_step, (x, ch_prev, ch_next, ran, counters),
+            jnp.arange(s, dtype=jnp.int32))
+        counters = dict(counters,
+                        crit=counters["crit"] + counters["sweep_max"])
+        done = ~jnp.any(ch_next)
+        return i + 1, x, ch_next, ran, done, counters
+
+    counters0 = dict(tile_work=jnp.float32(0), edge_work=jnp.float32(0),
+                     halo=jnp.float32(0), active=jnp.float32(0),
+                     crit=jnp.float32(0), sweep_max=jnp.float32(0))
+    ran0 = jnp.zeros(s, dtype=bool)
+    i, x, ch, ran, done, counters = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), x0, changed0, ran0, False, counters0))
+    return i, x, done, counters
+
+
+def run_async(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
+              damping: float = 0.85, tol: float = 1e-6,
+              max_sweeps: int = 10_000,
+              changed0: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, RunStats]:
+    inv_n = jnp.float32(1.0 / max(p.n, 1))
+    if changed0 is None:
+        changed0 = jnp.ones(p.r_pad, dtype=bool)
+    i, x, done, c = _async_loop(
+        p.vals, p.cols, p.nnz, p.valid, p.dangling, p.group_tiles,
+        p.group_edges, p.group_ext_tiles, x0, changed0,
+        jnp.float32(damping), jnp.float32(tol), inv_n, p.semiring,
+        apply_kind, max_sweeps, p.gb, p.s)
+    stats = RunStats(
+        sweeps=int(i), converged=bool(done),
+        tile_work=float(c["tile_work"]), edge_work=float(c["edge_work"]),
+        crit_tiles=float(c["crit"]),
+        active_group_sweeps=float(c["active"]),
+        halo_tiles=float(c["halo"]), total_groups=p.s, mode="async")
+    return x, stats

@@ -1,0 +1,112 @@
+"""Semiring algebra for graph computation — the NALE datapath abstraction.
+
+The paper's NALE (Node Arithmetic Logic Engine) is "optimized for fast MAC
+operations with a three-state output comparator".  Algebraically that is a
+semiring (⊕, ⊗): the MAC is the ⊗-then-⊕-accumulate, and the three-state
+comparator (smaller / equal / larger) is realized by comparing the new
+⊕-reduced value against the node's current value, producing both the update
+decision and the "changed" bit that feeds the asynchronous frontier.
+
+Semirings implemented (all the paper's six algorithms reduce to these):
+
+  plus_times : (+, ×)  — PageRank, general SpMV
+  min_plus   : (min,+) — SSSP, BFS-by-level
+  max_min    : (max,min) over {0,1} — boolean or_and reachability
+  min_select : (min, select-right) — connected-components label propagation
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """An (⊕, ⊗) pair with identities, driving both engines and kernels.
+
+    Attributes:
+      name:      stable identifier used for kernel dispatch (static arg).
+      add:       ⊕, the reduction (MAC accumulate / comparator side).
+      mul:       ⊗, the edge combine (MAC multiply side). mul(edge_w, x_src).
+      zero:      ⊕-identity; also the padding value for absent edges, chosen
+                 so that padded lanes are no-ops without explicit masks.
+      one:       ⊗-identity.
+      improves:  strict order test improves(new, old) -> bool array; the
+                 "three-state comparator" output used for frontier bits.
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    zero: float
+    one: float
+    improves: Callable[[Array, Array], Array]
+
+    def reduce(self, x: Array, axis=None) -> Array:
+        if self.name == "plus_times":
+            return jnp.sum(x, axis=axis)
+        if self.name == "min_plus" or self.name == "min_select":
+            return jnp.min(x, axis=axis)
+        if self.name == "max_min":
+            return jnp.max(x, axis=axis)
+        raise ValueError(f"unknown semiring {self.name}")
+
+
+def _ne(a, b):
+    return a != b
+
+
+PLUS_TIMES = Semiring(
+    name="plus_times",
+    add=lambda a, b: a + b,
+    mul=lambda w, x: w * x,
+    zero=0.0,
+    one=1.0,
+    improves=_ne,
+)
+
+MIN_PLUS = Semiring(
+    name="min_plus",
+    add=jnp.minimum,
+    mul=lambda w, x: w + x,
+    zero=np.inf,
+    one=0.0,
+    improves=lambda new, old: new < old,
+)
+
+MAX_MIN = Semiring(
+    name="max_min",
+    add=jnp.maximum,
+    mul=jnp.minimum,
+    zero=0.0,  # valid ⊕-identity for the {0,1} boolean carrier
+    one=1.0,
+    improves=lambda new, old: new > old,
+)
+
+# CC label propagation: edge weight is ignored, the neighbour label is
+# selected and min-reduced.  mul(w, x) = x  (select-right).
+MIN_SELECT = Semiring(
+    name="min_select",
+    add=jnp.minimum,
+    mul=lambda w, x: x,
+    zero=np.inf,
+    one=0.0,
+    improves=lambda new, old: new < old,
+)
+
+SEMIRINGS = {s.name: s for s in (PLUS_TIMES, MIN_PLUS, MAX_MIN, MIN_SELECT)}
+# alias: boolean or_and is max_min on the {0,1} carrier
+SEMIRINGS["or_and"] = MAX_MIN
+
+
+def get(name: str) -> Semiring:
+    try:
+        return SEMIRINGS[name]
+    except KeyError:
+        raise ValueError(f"unknown semiring {name!r}; have {sorted(SEMIRINGS)}")

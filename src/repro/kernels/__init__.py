@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the compute hot-spots (validated in interpret
+# mode on CPU; Mosaic lowering on real TPUs):
+#   bsr_spmv.py        — block-sparse semiring SpMV (the NALE array)
+#   flash_attention.py — fused causal/local attention
+#   wkv6.py            — RWKV-6 data-dependent-decay state recurrence
+# ops.py = jit'd dispatching wrappers; ref.py = pure-jnp oracles.

@@ -1,0 +1,129 @@
+"""Block-sparse semiring SpMV Pallas kernel — the NALE array on TPU.
+
+Paper mapping.  The NALE is a MAC-plus-comparator engine fed by FIFOs; a
+NALE in *cluster mode* executes a whole node cluster.  After the clustering
+pass densifies edges into B×B tiles (see ``core/cluster.py``), one tile is
+exactly one cluster-mode NALE work item: a dense semiring MAC between a
+tile of edges and a block of source-node values.  The systolic array of
+NALEs becomes the MXU (plus_times) / VPU (min_plus, max_min), VMEM plays
+the NALE-local FIFO store, and the *self-timed* property — work driven by
+actual data, not worst case — is realized by bounding each row-block's
+inner loop with its true tile count (``block_nnz``): empty FIFO slots cost
+nothing.
+
+Layout (ELL-of-tiles):
+  block_vals : (R, K, B, B)  tile values, padded with the ⊕-identity
+  block_cols : (R, K) int32  col-block index per tile
+  block_nnz  : (R,)   int32  true tile count per row-block
+  x          : (C, B)        input node values (block layout)
+  y          : (R, B)        output
+
+Grid: ``(R, K // bk)`` — row-blocks × tile-chunks.  The tile-chunk axis is
+innermost (sequential on TPU), accumulating into the output block that
+stays resident in VMEM; BlockSpecs stage (1, bk, B, B) value slabs
+HBM→VMEM per step.  ``x`` is kept whole in VMEM (graph shards are sized so
+a shard's node values fit: C·B·4 bytes ≤ a few MB — the same constraint
+the paper's per-NALE FIFO capacity imposes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _init_val(semiring: str) -> float:
+    return {"plus_times": 0.0, "min_plus": jnp.inf,
+            "max_min": 0.0, "min_select": jnp.inf}[semiring]
+
+
+def _tile_combine(semiring: str, tile, xb):
+    """One NALE MAC: combine (bk,B,B) tiles with (bk,B) gathered x blocks,
+    reduce over the tile-chunk and source axes -> (B,) partial."""
+    if semiring == "plus_times":
+        # (bk,B,B) @ (bk,B) -> (bk,B) -> (B,)
+        return jnp.einsum("kij,kj->i", tile, xb,
+                          preferred_element_type=jnp.float32)
+    if semiring == "min_plus":
+        return jnp.min(tile + xb[:, None, :], axis=(0, 2))
+    if semiring == "max_min":
+        return jnp.max(jnp.minimum(tile, xb[:, None, :]), axis=(0, 2))
+    if semiring == "min_select":
+        t = jnp.where(jnp.isfinite(tile), xb[:, None, :], jnp.inf)
+        return jnp.min(t, axis=(0, 2))
+    raise ValueError(semiring)
+
+
+def _acc(semiring: str, a, b):
+    if semiring == "plus_times":
+        return a + b
+    if semiring in ("min_plus", "min_select"):
+        return jnp.minimum(a, b)
+    return jnp.maximum(a, b)
+
+
+def _bsr_spmv_kernel(nnz_ref, cols_ref, vals_ref, x_ref, y_ref, *,
+                     semiring: str, bk: int):
+    r, kc = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(kc == 0)
+    def _():
+        y_ref[...] = jnp.full_like(y_ref, _init_val(semiring))
+
+    # Self-timed bound: only true tiles are combined.  ``nnz`` comes from a
+    # (1,)-blocked spec so the scalar is already in SMEM-like storage.
+    nnz = nnz_ref[0]
+    base = kc * bk
+    valid = jnp.clip(nnz - base, 0, bk)
+
+    @pl.when(valid > 0)
+    def _():
+        # Gather the source-node blocks for this tile chunk.  K is small
+        # (≤ bk), so an unrolled gather over bk dynamic row loads maps to
+        # bk VMEM dynamic slices.
+        tile = vals_ref[0]          # (bk, B, B)
+        cols = cols_ref[0]          # (bk,)
+        xb = jnp.stack([pl.load(x_ref, (pl.dslice(cols[t], 1), slice(None)))[0]
+                        for t in range(bk)])  # (bk, B)
+        # mask padded lanes of the *final* chunk with ⊕-identity values —
+        # padding tiles already hold identities, but their gathered x could
+        # combine under min_select; keep it exact:
+        lane = jnp.arange(bk) + base
+        live = (lane < nnz)[:, None, None]
+        tile = jnp.where(live, tile, _init_val(semiring))
+        part = _tile_combine(semiring, tile, xb)
+        y_ref[0, :] = _acc(semiring, y_ref[0, :], part)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "bk", "interpret"))
+def bsr_spmv(block_vals: jnp.ndarray, block_cols: jnp.ndarray,
+             block_nnz: jnp.ndarray, x: jnp.ndarray,
+             semiring: str = "plus_times", bk: int = 8,
+             interpret: bool = True) -> jnp.ndarray:
+    """Pallas block-sparse semiring SpMV.  See module docstring for layout."""
+    r, k, b, _ = block_vals.shape
+    if k % bk:
+        pad = bk - k % bk
+        block_vals = jnp.pad(block_vals, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                             constant_values=_init_val(semiring))
+        block_cols = jnp.pad(block_cols, ((0, 0), (0, pad)))
+        k += pad
+    c = x.shape[0]
+    grid = (r, k // bk)
+    return pl.pallas_call(
+        functools.partial(_bsr_spmv_kernel, semiring=semiring, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda r, kc: (r,)),                    # nnz
+            pl.BlockSpec((1, bk), lambda r, kc: (r, kc)),              # cols
+            pl.BlockSpec((1, bk, b, b), lambda r, kc: (r, kc, 0, 0)),  # vals
+            pl.BlockSpec((c, b), lambda r, kc: (0, 0)),                # x
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda r, kc: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, b), jnp.float32),
+        interpret=interpret,
+    )(block_nnz, block_cols, block_vals.astype(jnp.float32),
+      x.astype(jnp.float32))

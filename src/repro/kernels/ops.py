@@ -1,0 +1,81 @@
+"""Public jit'd kernel entry points with backend dispatch.
+
+Pallas-Mosaic lowers only on TPU; this container is CPU, so:
+  * default path (`impl="ref"`) is the pure-jnp oracle, which XLA fuses —
+    this is also what the multi-pod dry-run lowers (Pallas calls cannot be
+    SPMD-partitioned across a 512-device host mesh);
+  * `impl="pallas"` runs the kernel (interpret=True on CPU, compiled on
+    TPU) — tests sweep it against the reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .bsr_spmv import bsr_spmv as _bsr_spmv_pallas
+from .flash_attention import flash_attention as _flash_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+# ---------------------------------------------------------------------------
+# bsr_spmv
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("semiring",))
+def _bsr_spmv_ref_jit(block_vals, block_cols, x, semiring):
+    return _ref.bsr_spmv_ref(block_vals, block_cols, x, semiring)
+
+
+def bsr_spmv(block_vals, block_cols, block_nnz, x, semiring="plus_times",
+             impl="ref", bk=8):
+    """Block-sparse semiring SpMV.  See kernels/bsr_spmv.py for layout."""
+    if impl == "pallas":
+        return _bsr_spmv_pallas(block_vals, block_cols, block_nnz, x,
+                                semiring=semiring, bk=bk,
+                                interpret=not _on_tpu())
+    return _bsr_spmv_ref_jit(block_vals, block_cols, x, semiring)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+CHUNKED_THRESHOLD = 16384
+
+
+def attention(q, k, v, causal=True, window=None, scale=None, impl="ref",
+              bq=128, bk=128):
+    """Multi-head attention; q (B,H,S,D), k/v (B,Hkv,Skv,D).
+
+    Repeats kv heads for GQA, then dispatches kernel/reference.  The Pallas
+    path requires S == Skv (train/prefill); decode always uses the XLA
+    path.  Long sequences take the chunked-exact XLA path so the score
+    tensor never materializes at (S, S).
+    """
+    bsz, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if impl == "pallas" and s == k.shape[2] and s > 1 \
+            and v.shape[-1] == d:  # flash kernel assumes d_v == d_qk
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             scale=scale, bq=bq, bk=bk,
+                             interpret=not _on_tpu())
+    if s >= CHUNKED_THRESHOLD:
+        return _ref.mha_chunked(q, k, v, causal=causal, window=window,
+                                scale=scale)
+    return _ref.mha_ref(q, k, v, causal=causal, window=window, scale=scale)

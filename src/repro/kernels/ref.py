@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+These are also the production fallback path on backends without Mosaic
+(this CPU container, GPU): ``ops.py`` dispatches kernel vs. reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# bsr_spmv — block-sparse semiring SpMV
+# ---------------------------------------------------------------------------
+
+
+def bsr_spmv_ref(block_vals: jnp.ndarray, block_cols: jnp.ndarray,
+                 x: jnp.ndarray, semiring: str = "plus_times") -> jnp.ndarray:
+    """y[r*b+i] = ⊕_{k,j} vals[r,k,i,j] ⊗ x[cols[r,k]*b+j].
+
+    Args:
+      block_vals: (R, K, B, B) tile values (padded with ⊕-identity).
+      block_cols: (R, K) int32 col-block ids (padding points anywhere; the
+        padded tile's values are ⊕-identities so the result is unaffected).
+      x: (C, B) input vector in block layout.
+      semiring: plus_times | min_plus | max_min | min_select.
+    Returns:
+      y: (R, B).
+    """
+    xs = x[block_cols]  # (R, K, B)
+    if semiring == "plus_times":
+        return jnp.einsum("rkij,rkj->ri", block_vals, xs)
+    if semiring == "min_plus":
+        t = block_vals + xs[:, :, None, :]          # (R, K, B, B)
+        return jnp.min(t, axis=(1, 3))
+    if semiring == "max_min":
+        t = jnp.minimum(block_vals, xs[:, :, None, :])
+        return jnp.max(t, axis=(1, 3))
+    if semiring == "min_select":
+        # mul(w, x) = x when an edge exists; absent edges hold +inf weight.
+        t = jnp.where(jnp.isfinite(block_vals), xs[:, :, None, :], jnp.inf)
+        return jnp.min(t, axis=(1, 3))
+    raise ValueError(f"unknown semiring {semiring}")
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — exact softmax attention oracle
+# ---------------------------------------------------------------------------
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool = True, window: int | None = None,
+            scale: float | None = None) -> jnp.ndarray:
+    """Exact attention.  q: (B, H, S, D); k,v: (B, H, Skv, D) (kv already
+    repeated to H heads).  window = local attention span (None = global)."""
+    b, h, s, d = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None] + (skv - s)   # align last q with last k
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((s, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    # probs stored/saved in the value dtype (bf16): halves the dominant
+    # backward residual; matches the fused-kernel numerics on real TPUs
+    p = p.astype(v.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v).astype(q.dtype)
+
+
+def mha_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                causal: bool = True, window: int | None = None,
+                scale: float | None = None,
+                q_chunk: int = 1024) -> jnp.ndarray:
+    """Memory-safe exact attention for long sequences: lax.scan over query
+    chunks so the live score tensor is (B, H, q_chunk, Skv) instead of
+    (B, H, S, Skv).  XLA path used by 32k prefill (and anything ≥ 16k)."""
+    b, h, s, d = q.shape
+    dv = v.shape[-1]            # MLA: v_head_dim may differ from qk dim
+    skv = k.shape[2]
+    scale_ = scale if scale is not None else 1.0 / (d ** 0.5)
+    if s % q_chunk or s <= q_chunk:
+        return mha_ref(q, k, v, causal, window, scale)
+    nq = s // q_chunk
+    qs = q.reshape(b, h, nq, q_chunk, d).transpose(2, 0, 1, 3, 4)
+    kpos = jnp.arange(skv)[None, :]
+
+    def one(carry, args):
+        qi, qc = args
+        logits = jnp.einsum("bhsd,bhtd->bhst", qc, k).astype(jnp.float32) \
+            * scale_
+        qpos = (qi * q_chunk + jnp.arange(q_chunk))[:, None] + (skv - s)
+        mask = jnp.ones((q_chunk, skv), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, -jnp.inf)
+        p = jax.nn.softmax(logits, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p).astype(v.dtype)
+        o = jnp.einsum("bhst,bhtd->bhsd", p, v)
+        return carry, o.astype(q.dtype)
+
+    # scanned (not unrolled): the live score tensor stays one chunk.
+    # cost_analysis counts the body once — the roofline adds the known
+    # (nq−1)× analytic correction for prefill cells (launch/roofline.py).
+    _, outs = jax.lax.scan(one, (),
+                           (jnp.arange(nq, dtype=jnp.int32), qs))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dv)

@@ -1,0 +1,108 @@
+"""WKV6 recurrence Pallas kernel — RWKV-6's data-dependent-decay state
+update, the LM-side analogue of the paper's MAC-with-local-state NALE.
+
+Per head, per step:   a_t   = k_tᵀ v_t              (outer product, MXU)
+                      y_t   = r_t (S + u ⊙ a_t)     (readout)
+                      S     = diag(w_t) S + a_t      (decayed state)
+
+Grid: (batch·heads, time-chunks) with the chunk axis innermost; the
+(hs, hs) state lives in VMEM scratch across chunk iterations (the NALE's
+local FIFO store), so HBM traffic is the r/k/v/w streams only — the
+XLA scan path re-reads state from HBM every step.
+
+Layout: r,k,v,w as (BH, T, hs); u (hs,); y (BH, T, hs); final state out
+(BH, hs, hs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref,
+                 sout_ref, state, *, chunk: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        state[...] = s0_ref[0]
+
+    def step(t, _):
+        r = r_ref[0, t, :].astype(jnp.float32)       # (hs,)
+        k = k_ref[0, t, :].astype(jnp.float32)
+        v = v_ref[0, t, :].astype(jnp.float32)
+        w = w_ref[0, t, :].astype(jnp.float32)
+        u = u_ref[...].astype(jnp.float32)
+        a = k[:, None] * v[None, :]                  # (hs, hs) outer
+        y = jnp.einsum("k,kv->v", r, state[...] + u[:, None] * a,
+                       preferred_element_type=jnp.float32)
+        y_ref[0, t, :] = y.astype(y_ref.dtype)
+        state[...] = w[:, None] * state[...] + a
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ci == nc - 1)
+    def _():
+        sout_ref[0] = state[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, s0, chunk: int = 64, interpret: bool = True):
+    """r,k,v,w: (BH, T, hs); u: (hs,); s0: (BH, hs, hs).
+    Returns (y (BH, T, hs), s_final (BH, hs, hs))."""
+    bh, t, hs = r.shape
+    if t % chunk:
+        chunk = t
+    nc = t // chunk
+    grid = (bh, nc)
+    kern = functools.partial(_wkv6_kernel, chunk=chunk, nc=nc)
+    y, sout = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hs), lambda b, c: (b, c, 0)),  # r
+            pl.BlockSpec((1, chunk, hs), lambda b, c: (b, c, 0)),  # k
+            pl.BlockSpec((1, chunk, hs), lambda b, c: (b, c, 0)),  # v
+            pl.BlockSpec((1, chunk, hs), lambda b, c: (b, c, 0)),  # w
+            pl.BlockSpec((hs,), lambda b, c: (0,)),                # u
+            pl.BlockSpec((1, hs, hs), lambda b, c: (b, 0, 0)),     # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hs), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, hs, hs), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, hs), r.dtype),
+            jax.ShapeDtypeStruct((bh, hs, hs), jnp.float32),
+        ],
+        scratch_shapes=[_VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sout
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Oracle: plain scan (same math as models/rwkv._wkv_scan, flattened
+    heads)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        a = k_t[:, :, None] * v_t[:, None, :]
+        y = jnp.einsum("bk,bkv->bv", r_t, s + u[None, :, None] * a)
+        s = w_t[:, :, None] * s + a
+        return s, y
+
+    xs = tuple(x.transpose(1, 0, 2).astype(jnp.float32)
+               for x in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(r.dtype), s

@@ -1,0 +1,132 @@
+"""Roofline analysis from the dry-run dumps (EXPERIMENTS.md §Roofline).
+
+Terms per (arch × shape), single-pod 16×16 mesh, from the per-device
+composed cost analysis (see dryrun.py for the while-body composition):
+
+  compute_s    = HLO_FLOPs_per_device / 197e12        (bf16 peak / chip)
+  memory_s     = HLO_bytes_per_device / 819e9         (HBM BW / chip)
+  collective_s = collective_bytes_per_device / 50e9   (1 ICI link, worst
+                 case serialization; v5e has 4 links → best case ÷4)
+
+The dominant term is the bottleneck; roofline fraction for the dominant
+term = useful/attained:  MODEL_FLOPS/(chips·peak·T_dom) when compute-
+dominated, else term_ratio = T_dom / ΣT (how far overlap could help).
+
+Usage: python -m repro.launch.roofline --in results/dryrun_single \
+           [--md results/roofline.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from ..configs.base import get_config
+from . import analytic
+from .specs import SHAPES
+
+PEAK_FLOPS = 197e12     # bf16 / chip (TPU v5e class)
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+CHIPS = 256
+
+
+def load_cells(directory: str) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(cell: Dict) -> Optional[Dict]:
+    if cell.get("status") != "ok":
+        return None
+    comp = cell.get("composed") or {"cost": cell["full"]["cost"],
+                                    "collectives":
+                                        cell["full"]["collectives"]}
+    cfg0 = get_config(cell["arch"])
+    flops_dev = comp["cost"]["flops"] \
+        + analytic.prefill_attention_correction(cfg0, cell["shape"])
+    bytes_dev = comp["cost"]["bytes"]
+    coll_dev = comp["collectives"].get("total_bytes", 0.0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    cfg = get_config(cell["arch"])
+    an = analytic.model_flops(cfg, cell["shape"])
+    hlo_total = flops_dev * CHIPS
+    useful = an["model_flops"] / hlo_total if hlo_total else 0.0
+    # attained fraction of the dominant roof if perfectly overlapped
+    t_dom = terms[dominant]
+    mfu_bound = an["model_flops"] / (CHIPS * PEAK_FLOPS * t_dom) \
+        if t_dom else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": an["model_flops"], "hlo_flops_total": hlo_total,
+        "useful_ratio": useful, "mfu_bound": mfu_bound,
+        "peak_gib": cell["full"]["mem"]["peak_est_bytes"] / 2**30,
+        "coll_bytes_dev": coll_dev,
+        "collectives": {k: v for k, v in comp["collectives"].items()
+                        if k not in ("total_bytes", "count")},
+    }
+
+
+def make_table(cells: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MODEL_FLOPS | useful (MF/HLO) | MFU bound | peak GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for c in cells:
+        r = roofline_row(c)
+        if r is None:
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | — | — | — | "
+                f"{c['status']}: {c.get('reason', c.get('error', ''))[:60]}"
+                f" | | | | |")
+            continue
+        rows.append(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['mfu_bound']:.2f} | "
+            f"{r['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="indir", default="results/dryrun_single")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--json", dest="json_out", default=None)
+    args = ap.parse_args()
+    cells = load_cells(args.indir)
+    # order: arch registry order × shape order
+    order = {s: i for i, s in enumerate(SHAPES)}
+    cells.sort(key=lambda c: (c["arch"], order.get(c["shape"], 9)))
+    table = make_table(cells)
+    print(table)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("# Roofline (single-pod 16×16, per-step)\n\n")
+            f.write(table + "\n")
+    if args.json_out:
+        rows = [r for r in (roofline_row(c) for c in cells) if r]
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

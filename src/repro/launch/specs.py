@@ -1,0 +1,165 @@
+"""Abstract input/parameter specs for AOT lowering (no allocation).
+
+``input_specs`` provides ShapeDtypeStruct stand-ins for every model input
+of every (arch × shape) cell, sharding-annotated for the given mesh —
+the only way the FULL configs (up to 400B params) are ever touched.
+
+Assigned shape cells (LM family):
+  train_4k     seq 4096   global_batch 256   → train_step
+  prefill_32k  seq 32768  global_batch 32    → prefill
+  decode_32k   seq 32768  global_batch 128   → decode_step (1 new token)
+  long_500k    seq 524288 global_batch 1     → decode_step, sub-quadratic
+                archs only (rwkv6 / recurrentgemma); skips are recorded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from ..sharding.rules import spec_for, tree_spec
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# gradient-accumulation factor per arch for train_4k — sized so saved
+# layer-input activations fit 16 GB/chip HBM next to params+grads+opt
+# (napkin math in DESIGN.md §8; validated by dry-run memory_analysis)
+ACCUM = {
+    "dbrx-132b": 8,
+    "llama4-maverick-400b-a17b": 16,
+    "granite-3-2b": 4,
+    "chatglm3-6b": 4,
+    "minicpm3-4b": 8,
+    "nemotron-4-340b": 16,   # + shard_seq_boundary (SP) for activations
+    "rwkv6-1.6b": 8,
+    "llama-3.2-vision-11b": 8,
+    "whisper-tiny": 16,      # unshardable 51865-vocab logits dominate
+    "recurrentgemma-9b": 8,
+}
+
+
+def accum_for(arch: str, mesh) -> int:
+    """Cap accumulation so the microbatch stays divisible by the batch
+    sharding extent (pod×data) — an unshardable microbatch would silently
+    replicate activations on every data shard."""
+    batch_shards = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+    cap = max(1, SHAPES["train_4k"]["batch"] // batch_shards)
+    return min(ACCUM[arch], cap)
+
+
+def cell_applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full quadratic attention at 524288 context is "
+                       "intractable; arch has no sub-quadratic path "
+                       "(noted in DESIGN.md §Arch-applicability)")
+    if shape_name.startswith("decode") or shape_name == "long_500k":
+        if not cfg.decoder:
+            return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def axes_probe(cfg: ModelConfig) -> ModelConfig:
+    """Tiny-dims config with IDENTICAL pytree structure to the full one —
+    used to materialize the logical-axes pytree cheaply (axes strings are
+    structure, not math)."""
+    return dataclasses.replace(
+        cfg.reduced(), name=cfg.name + "-axesprobe",
+        num_layers=cfg.num_layers,
+        encoder_layers=cfg.encoder_layers)
+
+
+def param_axes(cfg: ModelConfig):
+    _, axes = lm.init(axes_probe(cfg), jax.random.PRNGKey(0))
+    return axes
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh):
+    """(ShapeDtypeStruct pytree with shardings, axes pytree)."""
+    shapes = jax.eval_shape(lambda k: lm.init(cfg, k)[0],
+                            jax.random.PRNGKey(0))
+    axes = param_axes(cfg)
+    specs = tree_spec(shapes, axes, mesh)
+    sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+    return sds, axes
+
+
+def abstract_opt_state(optimizer, params_sds, axes, mesh: Mesh):
+    shapes = jax.eval_shape(optimizer.init, params_sds)
+    st_axes = optimizer.state_axes(axes)
+    specs = tree_spec(shapes, st_axes, mesh)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def _sds(shape, dtype, mesh, axes_str):
+    sp = spec_for(shape, axes_str, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, sp))
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq: int,
+                train: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {"tokens": _sds((batch, seq), jnp.int32, mesh, "batch seq")}
+    if train:
+        out["labels"] = _sds((batch, seq), jnp.int32, mesh, "batch seq")
+        out["loss_mask"] = _sds((batch, seq), jnp.float32, mesh,
+                                "batch seq")
+    if cfg.img_seq:
+        out["img_embeds"] = _sds((batch, cfg.img_seq, cfg.d_model),
+                                 jnp.bfloat16, mesh, "batch img_seq .")
+    if cfg.encdec:
+        out["enc_embeds"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                                 jnp.bfloat16, mesh, "batch enc_seq .")
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, cache_len: int):
+    shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, cache_len, jnp.bfloat16))
+    axes = lm.cache_axes(cfg)
+    specs = tree_spec(shapes, axes, mesh)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def decode_input_specs(cfg: ModelConfig, mesh: Mesh, batch: int):
+    tok = _sds((batch,), jnp.int32, mesh, "batch")
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tok, pos
+
+
+def input_specs(cfg: ModelConfig, mesh: Mesh, shape_name: str):
+    """All abstract inputs for one (arch × shape) cell."""
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        return {"batch": batch_specs(cfg, mesh, sh["batch"], sh["seq"],
+                                     train=True)}
+    if sh["kind"] == "prefill":
+        return {"batch": batch_specs(cfg, mesh, sh["batch"], sh["seq"],
+                                     train=False)}
+    # decode: cache at full context + one token
+    tok, pos = decode_input_specs(cfg, mesh, sh["batch"])
+    return {"cache": cache_specs(cfg, mesh, sh["batch"], sh["seq"]),
+            "token": tok, "pos": pos}
+
+
+_ = (np, Optional)

@@ -1,0 +1,1 @@
+from . import cache, griffin, layers, lm, moe, rwkv  # noqa: F401

@@ -1,0 +1,99 @@
+"""Decode-state containers: KV caches (full, ring-buffered local, MLA
+latent, cross-attn) and recurrent states (RWKV, RG-LRU).
+
+Local-attention caches are ring buffers of size ``window`` with an
+explicit ``pos_of_slot`` time map — O(window) memory, which is what makes
+``long_500k`` decoding tractable for the hybrid/SSM architectures."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import griffin, rwkv
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, cache_len: int,
+                    dtype=jnp.bfloat16):
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, kv, hd), dtype)}
+
+
+def attn_cache_axes():
+    return {"k": "batch kv_seq kv_heads head_dim",
+            "v": "batch kv_seq kv_heads head_dim"}
+
+
+def local_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    w = cfg.window
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, w, kv, hd), dtype),
+            "v": jnp.zeros((batch, w, kv, hd), dtype),
+            "pos_of_slot": jnp.full((batch, w), -1, jnp.int32)}
+
+
+def local_cache_axes():
+    return {"k": "batch . kv_heads head_dim",
+            "v": "batch . kv_heads head_dim",
+            "pos_of_slot": "batch ."}
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype=jnp.bfloat16):
+    return {"c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype)}
+
+
+def mla_cache_axes():
+    return {"c_kv": "batch kv_seq .", "k_rope": "batch kv_seq ."}
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int,
+                     cache_len: int, dtype=jnp.bfloat16):
+    if kind in ("attn", "moe", "decoder"):
+        if cfg.attn_kind == "mla":
+            c = mla_cache_init(cfg, batch, cache_len, dtype)
+        else:
+            c = attn_cache_init(cfg, batch, cache_len, dtype)
+        if kind == "decoder":  # + static cross K/V filled at prefill
+            c = {"self": c,
+                 "cross_k": jnp.zeros((batch, cfg.encoder_seq,
+                                       cfg.num_kv_heads, cfg.head_dim),
+                                      dtype),
+                 "cross_v": jnp.zeros((batch, cfg.encoder_seq,
+                                       cfg.num_kv_heads, cfg.head_dim),
+                                      dtype)}
+        return c
+    if kind == "local_attn":
+        return local_cache_init(cfg, batch, dtype)
+    if kind == "cross_attn":
+        return {"k": jnp.zeros((batch, cfg.img_seq, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cfg.img_seq, cfg.num_kv_heads,
+                                cfg.head_dim), dtype)}
+    if kind == "rwkv":
+        return rwkv.rwkv_state_init(cfg, batch, jnp.float32)
+    if kind == "recurrent":
+        return griffin.recurrent_state_init(cfg, batch, jnp.float32)
+    raise ValueError(kind)
+
+
+def block_cache_axes(cfg: ModelConfig, kind: str):
+    if kind in ("attn", "moe", "decoder"):
+        c = mla_cache_axes() if cfg.attn_kind == "mla" else attn_cache_axes()
+        if kind == "decoder":
+            return {"self": c,
+                    "cross_k": "batch enc_seq kv_heads head_dim",
+                    "cross_v": "batch enc_seq kv_heads head_dim"}
+        return c
+    if kind == "local_attn":
+        return local_cache_axes()
+    if kind == "cross_attn":
+        return {"k": "batch img_seq kv_heads head_dim",
+                "v": "batch img_seq kv_heads head_dim"}
+    if kind == "rwkv":
+        return rwkv.rwkv_state_axes()
+    if kind == "recurrent":
+        return griffin.recurrent_state_axes()
+    raise ValueError(kind)

@@ -1,0 +1,108 @@
+"""Griffin / RecurrentGemma recurrent block: gated linear branch ×
+(conv1d → RG-LRU) branch.
+
+RG-LRU: r_t = σ(Wr x_t), i_t = σ(Wi x_t), a_t = a^(c·r_t) with
+a = σ(Λ) learnable, c = 8;  h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t).
+
+State per recurrent layer: h (B, lru_dim) + conv tap history
+(B, conv_width−1, lru_dim).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers
+
+_C = 8.0
+_TIME_CHUNK = 512  # remat chunk for the LRU scan (see rwkv.TIME_CHUNK)
+
+
+def recurrent_init(cfg: ModelConfig, key):
+    d, ld = cfg.d_model, cfg.lru_dim
+    dt = layers.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_x": layers._init(ks[0], (d, ld), d, dt),      # recurrent branch
+        "w_y": layers._init(ks[1], (d, ld), d, dt),      # gate branch
+        "conv_w": layers._init(ks[2], (cfg.conv_width, ld), cfg.conv_width, dt),
+        "conv_b": jnp.zeros((ld,), jnp.float32),
+        "wr": layers._init(ks[3], (ld, ld), ld, dt),
+        "wi": layers._init(ks[4], (ld, ld), ld, dt),
+        "lam": jnp.log(jnp.expm1(jnp.full((ld,), 4.0))),  # a ≈ σ(Λ) ≈ .98
+        "w_out": layers._init(ks[5], (ld, d), ld, dt),
+    }
+    a = {"w_x": "embed mlp", "w_y": "embed mlp", "conv_w": "conv mlp",
+         "conv_b": "norm", "wr": "mlp mlp2", "wi": "mlp mlp2",
+         "lam": "norm", "w_out": "mlp embed"}
+    return p, a
+
+
+def _rg_lru(p, x, h0, cd):
+    """x: (B,S,ld) post-conv; h0: (B,ld).  Returns (y, h_last)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsl,lm->bsm", x, p["wr"].astype(cd))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsl,lm->bsm", x, p["wi"].astype(cd))
+                       .astype(jnp.float32))
+    log_a_base = -jax.nn.softplus(-p["lam"])          # log σ(Λ)
+    log_a = _C * r * log_a_base[None, None, :]        # (B,S,ld)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    gated = (i * x.astype(jnp.float32)) * beta
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    def chunk(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    s = x.shape[1]
+    xs = (a.transpose(1, 0, 2), gated.transpose(1, 0, 2))
+    if s % _TIME_CHUNK == 0 and s > _TIME_CHUNK:
+        nc = s // _TIME_CHUNK
+        xs_c = jax.tree.map(
+            lambda t: t.reshape((nc, _TIME_CHUNK) + t.shape[1:]), xs)
+        h_last, ys = jax.lax.scan(
+            jax.checkpoint(chunk,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            h0.astype(jnp.float32), xs_c)
+        ys = ys.reshape((s,) + ys.shape[2:])
+    else:
+        h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(cd), h_last
+
+
+def _causal_conv(p, x, taps, cd):
+    """width-W depthwise causal conv.  taps: (B, W-1, ld) history."""
+    w = p["conv_w"].astype(cd)                        # (W, ld)
+    full = jnp.concatenate([taps.astype(cd), x], axis=1)
+    width = w.shape[0]
+    s = x.shape[1]
+    out = sum(full[:, i: i + s, :] * w[width - 1 - i]
+              for i in range(width))
+    return out + p["conv_b"].astype(cd), full[:, -(width - 1):, :]
+
+
+def recurrent_apply(cfg: ModelConfig, p, x, state):
+    """x: (B,S,D); state {"h": (B,ld), "conv": (B,W-1,ld)}."""
+    cd = layers.dtype_of(cfg.compute_dtype)
+    xr = jnp.einsum("bsd,dl->bsl", x, p["w_x"].astype(cd))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", x, p["w_y"].astype(cd)))
+    xc, conv_taps = _causal_conv(p, xr, state["conv"], cd)
+    y, h_last = _rg_lru(p, xc, state["h"], cd)
+    out = jnp.einsum("bsl,ld->bsd", y * gate, p["w_out"].astype(cd))
+    return out, {"h": h_last, "conv": conv_taps}
+
+
+def recurrent_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, cfg.lru_dim), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_dim),
+                              dtype)}
+
+
+def recurrent_state_axes():
+    return {"h": "batch mlp", "conv": "batch . mlp"}

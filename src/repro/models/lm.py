@@ -1,0 +1,631 @@
+"""ComposableLM — config-driven decoder stack covering all assigned
+families (dense GQA / MLA / MoE / RWKV / Griffin-hybrid / VLM cross-attn /
+enc-dec audio).
+
+Layers are organised as repeating *superblocks* (cfg.block_pattern) and
+scanned with ``lax.scan`` so HLO size and compile time are depth-
+independent — a 96-layer 340B model lowers as one superblock.  The pattern
+remainder (e.g. RecurrentGemma's trailing 2 recurrent layers) is unrolled.
+
+Three entry points per model:
+  forward_train(params, batch)          → logits (+ aux losses)
+  prefill(params, tokens, cache_len)    → last-token logits + cache
+  decode_step(params, cache, token, pos)→ logits + new cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.rules import constrain
+from . import cache as cache_lib
+from . import griffin, layers, moe, rwkv
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+
+def block_init(cfg: ModelConfig, kind: str, key):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    a: Dict[str, Any] = {}
+    p["ln1"], a["ln1"] = layers.norm_init(cfg)
+    if kind in ("attn", "local_attn", "moe", "decoder"):
+        if cfg.attn_kind == "mla":
+            p["attn"], a["attn"] = layers.mla_init(cfg, ks[0])
+        else:
+            p["attn"], a["attn"] = layers.attn_init(cfg, ks[0])
+        p["ln2"], a["ln2"] = layers.norm_init(cfg)
+        if kind == "moe":
+            p["mlp"], a["mlp"] = moe.moe_init(cfg, ks[1])
+        else:
+            p["mlp"], a["mlp"] = layers.mlp_init(cfg, ks[1])
+        if kind == "decoder":  # self + cross + mlp (whisper-style)
+            p["xattn"], a["xattn"] = layers.attn_init(cfg, ks[2])
+            p["ln_x"], a["ln_x"] = layers.norm_init(cfg)
+    elif kind == "cross_attn":
+        p["attn"], a["attn"] = layers.attn_init(cfg, ks[0])
+        p["gate"] = jnp.zeros((), jnp.float32)  # tanh-gated (llama-vision)
+        a["gate"] = ""
+        p["ln2"], a["ln2"] = layers.norm_init(cfg)
+        p["mlp"], a["mlp"] = layers.mlp_init(cfg, ks[1])
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+        a["gate_mlp"] = ""
+    elif kind == "rwkv":
+        p["rwkv"], a["rwkv"] = rwkv.rwkv_init(cfg, ks[0])
+        p["ln2"], a["ln2"] = layers.norm_init(cfg)
+    elif kind == "recurrent":
+        p["rec"], a["rec"] = griffin.recurrent_init(cfg, ks[0])
+        p["ln2"], a["ln2"] = layers.norm_init(cfg)
+        p["mlp"], a["mlp"] = layers.mlp_init(cfg, ks[1])
+    else:
+        raise ValueError(kind)
+    return p, a
+
+
+def block_apply_train(cfg: ModelConfig, kind: str, p, x, *, positions,
+                      enc=None, attn_impl="ref"):
+    """Full-sequence forward.  Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = layers.norm_apply(cfg, p["ln1"], x)
+    if kind in ("attn", "local_attn", "moe", "decoder"):
+        window = cfg.window if kind == "local_attn" else None
+        if cfg.attn_kind == "mla":
+            att = layers.mla_apply(cfg, p["attn"], h, positions=positions,
+                                   attn_impl=attn_impl)
+        else:
+            att = layers.attn_apply(cfg, p["attn"], h, positions=positions,
+                                    window=window, attn_impl=attn_impl)
+        x = x + att
+        if kind == "decoder":
+            hx = layers.norm_apply(cfg, p["ln_x"], x)
+            x = x + layers.attn_apply(cfg, p["xattn"], hx,
+                                      positions=positions, kv_src=enc,
+                                      causal=False, attn_impl=attn_impl)
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        if kind == "moe":
+            mo, info = moe.moe_apply(cfg, p["mlp"], h2)
+            aux = aux + info["aux_loss"]
+            x = x + mo
+        else:
+            x = x + layers.mlp_apply(cfg, p["mlp"], h2)
+    elif kind == "cross_attn":
+        att = layers.attn_apply(cfg, p["attn"], h, positions=positions,
+                                kv_src=enc, causal=False,
+                                attn_impl=attn_impl)
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * att
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) \
+            * layers.mlp_apply(cfg, p["mlp"], h2)
+    elif kind == "rwkv":
+        state = rwkv.rwkv_state_init(cfg, x.shape[0],
+                                     layers.dtype_of(cfg.compute_dtype))
+        tm, _, _ = rwkv.rwkv_time_mix(cfg, p["rwkv"], h, state["wkv"],
+                                      state["tm_x"])
+        x = x + tm
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        cm, _ = rwkv.rwkv_channel_mix(cfg, p["rwkv"], h2, state["cm_x"])
+        x = x + cm
+    elif kind == "recurrent":
+        state = griffin.recurrent_state_init(cfg, x.shape[0])
+        ro, _ = griffin.recurrent_apply(cfg, p["rec"], h, state)
+        x = x + ro
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h2)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def block_prefill(cfg: ModelConfig, kind: str, p, x, *, positions,
+                  cache_len: int, enc=None, attn_impl="ref"):
+    """Forward + build this block's decode cache."""
+    h = layers.norm_apply(cfg, p["ln1"], x)
+    if kind in ("attn", "local_attn", "moe", "decoder"):
+        if cfg.attn_kind == "mla":
+            att, c = layers.mla_prefill(cfg, p["attn"], h,
+                                        positions=positions,
+                                        cache_len=cache_len,
+                                        attn_impl=attn_impl)
+        elif kind == "local_attn":
+            att, c = _local_prefill(cfg, p["attn"], h, positions,
+                                    attn_impl)
+        else:
+            att, c = layers.attn_prefill(cfg, p["attn"], h,
+                                         positions=positions,
+                                         cache_len=cache_len,
+                                         attn_impl=attn_impl)
+        x = x + att
+        if kind == "decoder":
+            hx = layers.norm_apply(cfg, p["ln_x"], x)
+            x = x + layers.attn_apply(cfg, p["xattn"], hx,
+                                      positions=positions, kv_src=enc,
+                                      causal=False, attn_impl=attn_impl)
+            ckv = layers.cross_attn_kv(cfg, p["xattn"], enc)
+            c = {"self": c, "cross_k": ckv["k"], "cross_v": ckv["v"]}
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        if kind == "moe":
+            mo, _ = moe.moe_apply(cfg, p["mlp"], h2)
+            x = x + mo
+        else:
+            x = x + layers.mlp_apply(cfg, p["mlp"], h2)
+        return x, c
+    if kind == "cross_attn":
+        att = layers.attn_apply(cfg, p["attn"], h, positions=positions,
+                                kv_src=enc, causal=False,
+                                attn_impl=attn_impl)
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * att
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) \
+            * layers.mlp_apply(cfg, p["mlp"], h2)
+        ckv = layers.cross_attn_kv(cfg, p["attn"], enc)
+        return x, {"k": ckv["k"], "v": ckv["v"]}
+    if kind == "rwkv":
+        state = rwkv.rwkv_state_init(cfg, x.shape[0],
+                                     layers.dtype_of(cfg.compute_dtype))
+        tm, wkv_s, tm_x = rwkv.rwkv_time_mix(cfg, p["rwkv"], h,
+                                             state["wkv"], state["tm_x"])
+        x = x + tm
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        cm, cm_x = rwkv.rwkv_channel_mix(cfg, p["rwkv"], h2,
+                                         state["cm_x"])
+        x = x + cm
+        return x, {"wkv": wkv_s.astype(jnp.float32),
+                   "tm_x": tm_x.astype(jnp.float32),
+                   "cm_x": cm_x.astype(jnp.float32)}
+    if kind == "recurrent":
+        state = griffin.recurrent_state_init(cfg, x.shape[0])
+        ro, st = griffin.recurrent_apply(cfg, p["rec"], h, state)
+        x = x + ro
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h2)
+        return x, jax.tree.map(lambda t: t.astype(jnp.float32), st)
+    raise ValueError(kind)
+
+
+def _local_prefill(cfg, p, h, positions, attn_impl):
+    """Local attention prefill: compute windowed attention, keep only the
+    last ``window`` K/V in a ring buffer (slot = pos % window)."""
+    import numpy as np
+    att_full, full_cache = layers.attn_prefill(
+        cfg, p, h, positions=positions, cache_len=h.shape[1],
+        window=cfg.window, attn_impl=attn_impl)
+    s, w = h.shape[1], cfg.window
+    b = h.shape[0]
+    kfull, vfull = full_cache["k"], full_cache["v"]
+    keep_from = max(0, s - w)
+    times = np.arange(keep_from, s)          # static: last min(s,w) tokens
+    slots = times % w                        # unique (consecutive ints)
+    k = jnp.zeros((b, w) + kfull.shape[2:], kfull.dtype)
+    v = jnp.zeros_like(k)
+    pos_of_slot = jnp.full((b, w), -1, jnp.int32)
+    k = k.at[:, slots].set(kfull[:, times])
+    v = v.at[:, slots].set(vfull[:, times])
+    pos_of_slot = pos_of_slot.at[:, slots].set(
+        jnp.asarray(times, jnp.int32)[None])
+    return att_full, {"k": k, "v": v, "pos_of_slot": pos_of_slot}
+
+
+def block_decode(cfg: ModelConfig, kind: str, p, x, c, *, pos,
+                 attn_impl="ref"):
+    """One-token step.  Returns (x, new_cache)."""
+    h = layers.norm_apply(cfg, p["ln1"], x)
+    if kind in ("attn", "moe", "decoder"):
+        cc = c["self"] if kind == "decoder" else c
+        if cfg.attn_kind == "mla":
+            att, cc = layers.mla_decode(cfg, p["attn"], h, cc, pos=pos)
+        else:
+            att, cc = layers.attn_decode(cfg, p["attn"], h, cc, pos=pos)
+        x = x + att
+        if kind == "decoder":
+            hx = layers.norm_apply(cfg, p["ln_x"], x)
+            x = x + layers.cross_attn_decode(
+                cfg, p["xattn"], hx, {"k": c["cross_k"], "v": c["cross_v"]})
+            c = {"self": cc, "cross_k": c["cross_k"],
+                 "cross_v": c["cross_v"]}
+        else:
+            c = cc
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        if kind == "moe":
+            mo, _ = moe.moe_apply(cfg, p["mlp"], h2, dropless=True)
+            x = x + mo
+        else:
+            x = x + layers.mlp_apply(cfg, p["mlp"], h2)
+        return x, c
+    if kind == "local_attn":
+        att, c = _local_decode(cfg, p["attn"], h, c, pos)
+        x = x + att
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h2)
+        return x, c
+    if kind == "cross_attn":
+        att = layers.cross_attn_decode(cfg, p["attn"], h, c)
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * att
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) \
+            * layers.mlp_apply(cfg, p["mlp"], h2)
+        return x, c
+    if kind == "rwkv":
+        tm, wkv_s, tm_x = rwkv.rwkv_time_mix(
+            cfg, p["rwkv"], h, c["wkv"].astype(h.dtype), c["tm_x"])
+        x = x + tm
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        cm, cm_x = rwkv.rwkv_channel_mix(cfg, p["rwkv"], h2, c["cm_x"])
+        x = x + cm
+        return x, {"wkv": wkv_s.astype(jnp.float32),
+                   "tm_x": tm_x.astype(jnp.float32),
+                   "cm_x": cm_x.astype(jnp.float32)}
+    if kind == "recurrent":
+        ro, st = griffin.recurrent_apply(cfg, p["rec"], h, c)
+        x = x + ro
+        h2 = layers.norm_apply(cfg, p["ln2"], x)
+        x = x + layers.mlp_apply(cfg, p["mlp"], h2)
+        return x, jax.tree.map(lambda t: t.astype(jnp.float32), st)
+    raise ValueError(kind)
+
+
+def _local_decode(cfg, p, h, c, pos):
+    """Ring-buffer local attention decode (O(window) memory)."""
+    cd = layers.dtype_of(cfg.compute_dtype)
+    b = h.shape[0]
+    w = cfg.window
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(cd))
+    k_new = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(cd))
+    v_new = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(cd))
+    if cfg.pos_embedding == "rope":
+        q = layers.apply_rope(q, pos_arr[:, None], cfg.rope_theta,
+                              cfg.rope_fraction)
+        k_new = layers.apply_rope(k_new, pos_arr[:, None], cfg.rope_theta,
+                                  cfg.rope_fraction)
+    slot = pos_arr % w
+    onehot = (jnp.arange(w, dtype=jnp.int32)[None] == slot[:, None])
+    oh = onehot[:, :, None, None].astype(c["k"].dtype)
+    k = c["k"] * (1 - oh) + oh * k_new.astype(c["k"].dtype)
+    v = c["v"] * (1 - oh) + oh * v_new.astype(c["v"].dtype)
+    pos_of_slot = jnp.where(onehot, pos_arr[:, None], c["pos_of_slot"])
+    # attend over valid slots
+    kk, vv = k, v
+    hh, kvh = q.shape[2], kk.shape[2]
+    if kvh != hh:
+        kk = jnp.repeat(kk, hh // kvh, axis=2)
+        vv = jnp.repeat(vv, hh // kvh, axis=2)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bthk,bshk->bhts", q, kk).astype(jnp.float32) * scale
+    tpos = pos_of_slot[:, None, None, :]
+    mask = (tpos >= 0) & (tpos <= pos_arr[:, None, None, None]) & \
+        (tpos > pos_arr[:, None, None, None] - w)
+    s = jnp.where(mask, s, -jnp.inf)
+    o = jnp.einsum("bhts,bshk->bthk",
+                   jax.nn.softmax(s, -1).astype(vv.dtype), vv)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+    return out, {"k": k, "v": v, "pos_of_slot": pos_of_slot}
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, axes).  Scanned superblock params are stacked on a
+    leading 'stack' axis; remainder blocks are separate."""
+    ks = jax.random.split(key, 8)
+    dt = layers.dtype_of(cfg.param_dtype)
+    p: Dict[str, Any] = {
+        "embed": layers._init(ks[0], (cfg.vocab_size, cfg.d_model),
+                              cfg.d_model, dt),
+    }
+    a: Dict[str, Any] = {"embed": "vocab embed"}
+    if not cfg.tie_embeddings:
+        p["head"] = layers._init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                 cfg.d_model, dt)
+        a["head"] = "embed vocab"
+    p["ln_f"], a["ln_f"] = layers.norm_init(cfg)
+    if cfg.pos_embedding == "learned":
+        p["pos_emb"] = layers._init(ks[2], (cfg.max_seq, cfg.d_model),
+                                    cfg.d_model, dt)
+        a["pos_emb"] = ". embed"
+    if cfg.img_seq:  # vision stub projection (frontend embeddings → d)
+        p["img_proj"] = layers._init(ks[3], (cfg.d_model, cfg.d_model),
+                                     cfg.d_model, dt)
+        a["img_proj"] = "embed embed2"
+
+    reps = cfg.pattern_repeats
+    pat = cfg.block_pattern
+
+    def init_pos(j, kind):
+        def one(k):
+            return block_init(cfg, kind, k)[0]
+        keys = jax.random.split(jax.random.fold_in(ks[4], j), reps)
+        stacked = jax.jit(lambda kk: jax.vmap(one)(kk))(keys)
+        _, ax = block_init(cfg, kind, keys[0])
+        ax = jax.tree.map(lambda s: ("stack " + s).strip(), ax)
+        return stacked, ax
+
+    sb_p, sb_a = {}, {}
+    for j, kind in enumerate(pat):
+        sb_p[f"b{j}"], sb_a[f"b{j}"] = init_pos(j, kind)
+    p["blocks"] = sb_p
+    a["blocks"] = sb_a
+
+    rem_p, rem_a = {}, {}
+    for j, kind in enumerate(cfg.remainder_layers):
+        rem_p[f"r{j}"], rem_a[f"r{j}"] = block_init(
+            cfg, kind, jax.random.fold_in(ks[5], 1000 + j))
+    if rem_p:
+        p["rem"] = rem_p
+        a["rem"] = rem_a
+
+    if cfg.encdec:
+        enc_p, enc_a = {}, {}
+
+        def enc_one(k):
+            return block_init(cfg, "attn", k)[0]
+        keys = jax.random.split(ks[6], cfg.encoder_layers)
+        enc_p["blocks"] = jax.jit(lambda kk: jax.vmap(enc_one)(kk))(keys)
+        _, ax = block_init(cfg, "attn", keys[0])
+        enc_a["blocks"] = jax.tree.map(lambda s: ("stack " + s).strip(), ax)
+        enc_p["ln_f"], enc_a["ln_f"] = layers.norm_init(cfg)
+        if cfg.pos_embedding == "learned":
+            enc_p["pos_emb"] = layers._init(
+                ks[7], (cfg.encoder_seq, cfg.d_model), cfg.d_model, dt)
+            enc_a["pos_emb"] = ". embed"
+        p["encoder"] = enc_p
+        a["encoder"] = enc_a
+    return p, a
+
+
+def _embed(cfg, p, tokens):
+    cd = layers.dtype_of(cfg.compute_dtype)
+    x = p["embed"].astype(cd)[tokens]
+    return constrain(x, "batch . .")
+
+
+def _logits(cfg, p, x):
+    cd = layers.dtype_of(cfg.compute_dtype)
+    x = layers.norm_apply(cfg, p["ln_f"], x)
+    if cfg.tie_embeddings:
+        return x @ p["embed"].astype(cd).T
+    return x @ p["head"].astype(cd)
+
+
+def encode(cfg: ModelConfig, p, enc_embeds):
+    """Run the (whisper) encoder over stub frame embeddings."""
+    cd = layers.dtype_of(cfg.compute_dtype)
+    ep = p["encoder"]
+    x = enc_embeds.astype(cd)
+    if cfg.pos_embedding == "learned":
+        x = x + ep["pos_emb"].astype(cd)[None, : x.shape[1]]
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+    def body(x, pl):
+        h = layers.norm_apply(cfg, pl["ln1"], x)
+        att = layers.attn_apply(cfg, pl["attn"], h, positions=positions,
+                                causal=False)
+        x = x + att
+        h2 = layers.norm_apply(cfg, pl["ln2"], x)
+        x = x + layers.mlp_apply(cfg, pl["mlp"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, ep["blocks"])
+    return layers.norm_apply(cfg, ep["ln_f"], x)
+
+
+def _enc_for(cfg, p, batch: Dict):
+    """Resolve the cross-attention source (image / audio stub)."""
+    cd = layers.dtype_of(cfg.compute_dtype)
+    if cfg.encdec:
+        return encode(cfg, p, batch["enc_embeds"])
+    if cfg.img_seq:
+        img = batch["img_embeds"].astype(cd)
+        return img @ p["img_proj"].astype(cd)
+    return None
+
+
+def forward_train(cfg: ModelConfig, p, batch: Dict, attn_impl="ref",
+                  sb_param_shardings=None):
+    """batch: tokens (B,S) [+ img_embeds / enc_embeds stubs].
+    Returns (logits, aux_loss).
+
+    sb_param_shardings: optional NamedSharding pytree for ONE superblock
+    slice.  Constraining the slice INSIDE the scan body pins the per-layer
+    gradient sharding too (with_sharding_constraint is its own transpose),
+    teaching GSPMD to reduce-scatter weight grads instead of all-reducing
+    them at full shape inside the backward while-loop (EXPERIMENTS §Perf).
+    """
+    tokens = batch["tokens"]
+    x = _embed(cfg, p, tokens)
+    if cfg.pos_embedding == "learned":
+        x = x + p["pos_emb"].astype(x.dtype)[None, : x.shape[1]]
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], tokens.shape)
+    enc = _enc_for(cfg, p, batch)
+    pat = cfg.block_pattern
+
+    def superblock(x, pslice):
+        if sb_param_shardings is not None:
+            pslice = jax.lax.with_sharding_constraint(
+                pslice, sb_param_shardings)
+        if cfg.shard_seq_boundary:
+            # the remat-saved buffer is this block input: shard its seq dim
+            # over the model axis (Megatron-style sequence parallelism)
+            x = constrain(x, "batch seq_model .")
+        aux = jnp.float32(0.0)
+        for j, kind in enumerate(pat):
+            x, a_ = block_apply_train(cfg, kind, pslice[f"b{j}"], x,
+                                      positions=positions, enc=enc,
+                                      attn_impl=attn_impl)
+            aux = aux + a_
+        return x, aux
+
+    rg = cfg.remat_group
+    reps = cfg.pattern_repeats
+    if rg > 1 and reps % rg == 0:
+        # 2-level checkpointing: the group saves only its input (÷rg
+        # boundary activations); each superblock inside is ALSO
+        # checkpointed, so a group's backward holds one layer's internals
+        # at a time.  Forward is computed 3× total — the standard
+        # deep-stack memory/recompute trade (DESIGN.md §8).
+        inner = jax.checkpoint(
+            superblock, policy=jax.checkpoint_policies.nothing_saveable) \
+            if cfg.remat else superblock
+
+        def group(x, pg):
+            aux = jnp.float32(0.0)
+            for i in range(rg):
+                x, a_ = inner(x, jax.tree.map(lambda t: t[i], pg))
+                aux = aux + a_
+            return x, aux
+
+        stacked = jax.tree.map(
+            lambda t: t.reshape((reps // rg, rg) + t.shape[1:]),
+            p["blocks"])
+        gb = group
+        if cfg.remat:
+            gb = jax.checkpoint(
+                group, policy=jax.checkpoint_policies.nothing_saveable)
+        x, auxs = jax.lax.scan(gb, x, stacked)
+    else:
+        sb = superblock
+        if cfg.remat:
+            sb = jax.checkpoint(
+                superblock, policy=jax.checkpoint_policies.nothing_saveable)
+        x, auxs = jax.lax.scan(sb, x, p["blocks"])
+    aux = jnp.sum(auxs)
+    for j, kind in enumerate(cfg.remainder_layers):
+        x, a_ = block_apply_train(cfg, kind, p["rem"][f"r{j}"], x,
+                                  positions=positions, enc=enc,
+                                  attn_impl=attn_impl)
+        aux = aux + a_
+    return _logits(cfg, p, x), aux
+
+
+def loss_fn(cfg: ModelConfig, p, batch: Dict, attn_impl="ref",
+            sb_param_shardings=None):
+    logits, aux = forward_train(cfg, p, batch, attn_impl,
+                                sb_param_shardings=sb_param_shardings)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = jnp.sum((logz - ll) * mask) / denom
+    zloss = 1e-4 * jnp.sum(jnp.square(logz) * mask) / denom
+    total = ce + zloss + aux
+    return total, {"ce": ce, "zloss": zloss, "aux": aux,
+                   "ppl": jnp.exp(ce)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    """Stacked (scan-compatible) cache pytree + its logical axes."""
+    reps = cfg.pattern_repeats
+
+    def stack_init(kind):
+        one = cache_lib.block_cache_init(cfg, kind, batch, cache_len, dtype)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (reps,) + l.shape), one)
+
+    c = {"blocks": {f"b{j}": stack_init(kind)
+                    for j, kind in enumerate(cfg.block_pattern)}}
+    if cfg.remainder_layers:
+        c["rem"] = {f"r{j}": cache_lib.block_cache_init(cfg, kind, batch,
+                                                        cache_len, dtype)
+                    for j, kind in enumerate(cfg.remainder_layers)}
+    return c
+
+
+def cache_axes(cfg: ModelConfig):
+    c = {"blocks": {
+        f"b{j}": jax.tree.map(lambda s: ("stack " + s).strip(),
+                              cache_lib.block_cache_axes(cfg, kind))
+        for j, kind in enumerate(cfg.block_pattern)}}
+    if cfg.remainder_layers:
+        c["rem"] = {f"r{j}": cache_lib.block_cache_axes(cfg, kind)
+                    for j, kind in enumerate(cfg.remainder_layers)}
+    return c
+
+
+def prefill(cfg: ModelConfig, p, batch: Dict, cache_len: int,
+            attn_impl="ref"):
+    """Returns (last_logits (B,V), cache)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, p, tokens)
+    if cfg.pos_embedding == "learned":
+        x = x + p["pos_emb"].astype(x.dtype)[None, : x.shape[1]]
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], tokens.shape)
+    enc = _enc_for(cfg, p, batch)
+    pat = cfg.block_pattern
+
+    def superblock(x, pslice):
+        caches = {}
+        for j, kind in enumerate(pat):
+            x, c = block_prefill(cfg, kind, pslice[f"b{j}"], x,
+                                 positions=positions, cache_len=cache_len,
+                                 enc=enc, attn_impl=attn_impl)
+            caches[f"b{j}"] = c
+        return x, caches
+
+    x, caches = jax.lax.scan(superblock, x, p["blocks"])
+    out = {"blocks": caches}
+    if cfg.remainder_layers:
+        rem = {}
+        for j, kind in enumerate(cfg.remainder_layers):
+            x, c = block_prefill(cfg, kind, p["rem"][f"r{j}"], x,
+                                 positions=positions, cache_len=cache_len,
+                                 enc=enc, attn_impl=attn_impl)
+            rem[f"r{j}"] = c
+        out["rem"] = rem
+    logits = _logits(cfg, p, x[:, -1:, :])[:, 0]
+    return logits, out
+
+
+def decode_step(cfg: ModelConfig, p, cache, token, pos, attn_impl="ref"):
+    """token: (B,) int32; pos: scalar or (B,) current position.
+    Returns (logits (B,V), new_cache)."""
+    x = _embed(cfg, p, token[:, None])
+    b = token.shape[0]
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    if cfg.pos_embedding == "learned":
+        x = x + p["pos_emb"].astype(x.dtype)[pos_arr][:, None]
+    pat = cfg.block_pattern
+
+    def superblock(x, scanned):
+        pslice, cslice = scanned
+        new_c = {}
+        for j, kind in enumerate(pat):
+            x, c = block_decode(cfg, kind, pslice[f"b{j}"], x,
+                                cslice[f"b{j}"], pos=pos_arr,
+                                attn_impl=attn_impl)
+            new_c[f"b{j}"] = c
+        return x, new_c
+
+    x, new_blocks = jax.lax.scan(superblock, x,
+                                 (p["blocks"], cache["blocks"]))
+    new_cache = {"blocks": new_blocks}
+    if cfg.remainder_layers:
+        rem = {}
+        for j, kind in enumerate(cfg.remainder_layers):
+            x, c = block_decode(cfg, kind, p["rem"][f"r{j}"], x,
+                                cache["rem"][f"r{j}"], pos=pos_arr,
+                                attn_impl=attn_impl)
+            rem[f"r{j}"] = c
+        new_cache["rem"] = rem
+    logits = _logits(cfg, p, x)[:, 0]
+    return logits, new_cache
+
+
+_ = (functools, Optional)

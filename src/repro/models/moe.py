@@ -1,0 +1,154 @@
+"""Mixture-of-Experts with scatter/gather capacity dispatch.
+
+Paper tie-in (DESIGN.md §4): the token→expert assignment is a sparse
+bipartite graph; dispatch/combine are exactly the graph processor's
+Dispatch Logic (scatter) and Output Logic (gather), and the router's
+balance objective is the paper's cluster load-balancing criterion.  Tokens
+are processed in fixed-size *groups* (the clustering granularity): group
+size trades capacity slack against locality, the same trade the paper's
+node-cluster size makes against NALE FIFO depth.
+
+Unlike the classic GShard (S,E,C)-one-hot dispatch — whose mask grows
+quadratically with group size — dispatch here is a true scatter into a
+per-group (E·C+1, D) capacity buffer (slot = expert·C + position; dropped
+tokens land in the sink row), and combine is the weighted gather back.
+Memory is tokens·k·cf·D, activation-scale.
+
+Shardings: groups ride the batch axes (pod, data); experts ride "model"
+(expert parallelism); the dispatch buffer resharding from G-local to
+expert-parallel is the all_to_all the roofline tracks.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers
+from ..sharding.rules import constrain
+
+
+def moe_init(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    dt = layers.dtype_of(cfg.param_dtype)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+
+    def expert_bank(k):
+        if cfg.mlp_kind == "swiglu":
+            k1, k2, k3 = jax.random.split(k, 3)
+            p = {"wi": layers._init(k1, (e, d, ff), d, dt),
+                 "wg": layers._init(k2, (e, d, ff), d, dt),
+                 "wo": layers._init(k3, (e, ff, d), ff, dt)}
+            a = {"wi": "expert embed mlp", "wg": "expert embed mlp",
+                 "wo": "expert mlp embed"}
+        else:
+            k1, k2 = jax.random.split(k, 2)
+            p = {"wi": layers._init(k1, (e, d, ff), d, dt),
+                 "wo": layers._init(k2, (e, ff, d), ff, dt)}
+            a = {"wi": "expert embed mlp", "wo": "expert mlp embed"}
+        return p, a
+
+    pe, ae = expert_bank(ks[0])
+    p = {"router": layers._init(ks[1], (d, e), d, jnp.float32),
+         "experts": pe}
+    a = {"router": "embed expert", "experts": ae}
+    if cfg.shared_expert:
+        ps, as_ = layers.mlp_init(cfg, ks[2])
+        p["shared"] = ps
+        a["shared"] = as_
+    return p, a
+
+
+def _expert_ffn(cfg: ModelConfig, p, x):
+    """x: (G, E, C, D) → (G, E, C, D); E rides the 'model' axis (EP)."""
+    cd = layers.dtype_of(cfg.compute_dtype)
+    h = jnp.einsum("gecd,edf->gecf", x, p["wi"].astype(cd))
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", x, p["wg"].astype(cd))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(cd))
+
+
+def moe_apply(cfg: ModelConfig, p, x,
+              dropless: bool = False) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D).  Returns (out, aux) with router losses in aux.
+
+    Capacity semantics: within each group, tokens beyond an expert's
+    capacity are dropped (their residual passes through untouched).
+    ``dropless=True`` sizes capacity to the worst case (decode path:
+    a dropped token at decode time would corrupt generation)."""
+    cd = layers.dtype_of(cfg.compute_dtype)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    gs = min(cfg.moe_group_size, b * s)
+    tokens = x.reshape(-1, d)
+    ng = tokens.shape[0] // gs
+    xt = tokens[: ng * gs].reshape(ng, gs, d)
+    xt = constrain(xt, "batch . .")
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, k)              # (G, S, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    cap = gs if dropless else int(max(1, gs * k * cfg.capacity_factor / e))
+    # position of each (token, choice) within its expert's capacity,
+    # priority order: all first choices, then second choices, ... (GShard)
+    oh = jax.nn.one_hot(topi, e, dtype=jnp.float32)   # (G,S,K,E)
+    flat = oh.transpose(0, 2, 1, 3).reshape(ng, k * gs, e)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat        # (G,K*S,E)
+    pos = jnp.sum(pos_flat.reshape(ng, k, gs, e).transpose(0, 2, 1, 3)
+                  * oh, axis=-1).astype(jnp.int32)    # (G,S,K)
+    keep = pos < cap
+    sink = e * cap                                    # drop slot
+    slot = jnp.where(keep, topi * cap + pos, sink)    # (G,S,K)
+
+    # --- Dispatch Logic: scatter tokens into per-group capacity buffers
+    def scatter_group(xg, sg):
+        upd = jnp.broadcast_to(xg[:, None, :], (gs, k, d)).reshape(-1, d)
+        buf = jnp.zeros((e * cap + 1, d), cd)
+        return buf.at[sg.reshape(-1)].add(upd.astype(cd))
+
+    buf = jax.vmap(scatter_group)(xt, slot)           # (G, E*C+1, D)
+    xin = buf[:, : e * cap].reshape(ng, e, cap, d)
+    xin = constrain(xin, "batch expert . .")          # EP reshard
+    xout = _expert_ffn(cfg, p["experts"], xin)        # (G,E,C,D)
+
+    # --- Output Logic: gather weighted expert outputs back to tokens
+    buf_out = jnp.concatenate(
+        [xout.reshape(ng, e * cap, d),
+         jnp.zeros((ng, 1, d), xout.dtype)], axis=1)  # sink row = 0
+
+    def gather_group(bg, sg, wg):
+        y = bg[sg.reshape(-1)].reshape(gs, k, d)
+        return jnp.sum(y * wg[..., None].astype(y.dtype), axis=1)
+
+    out = jax.vmap(gather_group)(buf_out, slot, topw)  # (G, S, D)
+    out = constrain(out, "batch . .")
+
+    if cfg.shared_expert:
+        out = out + layers.mlp_apply(cfg, p["shared"], xt)
+
+    out_flat = out.reshape(-1, d)
+    if out_flat.shape[0] < tokens.shape[0]:  # group-size remainder
+        out_flat = jnp.concatenate(
+            [out_flat, tokens[out_flat.shape[0]:].astype(out_flat.dtype)],
+            axis=0)
+    out = out_flat.reshape(b, s, d)
+
+    # load-balance aux (the cluster balance objective) + router z-loss
+    me = jnp.mean(gates, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(topi[..., 0], e), axis=(0, 1))
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+    z = cfg.router_z_coef * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out, {"aux_loss": aux + z, "frac_dropped": frac_dropped,
+                 "expert_load": ce}

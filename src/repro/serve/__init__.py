@@ -1,0 +1,1 @@
+from .engine import ServeLoop, generate  # noqa: F401

@@ -1,0 +1,162 @@
+"""Batched serving: prefill + decode loop, greedy/temperature sampling,
+and a slot-based continuous-batching scheduler.
+
+``generate`` is the static-batch path (one wave of prompts decoded
+together).  ``ServeLoop`` keeps a fixed pool of B slots with a shared
+batched KV cache; finished slots are refilled from the queue in *waves*
+(batch prefill), and the per-leaf "batch" position comes from the cache's
+logical axes so slot surgery works for every cache family (KV / latent /
+ring / recurrent state)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from ..sharding.rules import parse_axes
+
+
+def _sample(logits, key, temperature: float):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(
+        jnp.int32)
+
+
+def generate(cfg: ModelConfig, params, prompts: jnp.ndarray,
+             max_new_tokens: int, temperature: float = 0.0,
+             key: Optional[jax.Array] = None,
+             extras: Optional[Dict] = None,
+             eos: Optional[int] = None) -> np.ndarray:
+    """prompts: (B, S) int32.  Returns (B, S + max_new) tokens."""
+    b, s = prompts.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cache_len = s + max_new_tokens
+    batch = {"tokens": prompts, **(extras or {})}
+    logits, cache = jax.jit(
+        lambda p, bt: lm.prefill(cfg, p, bt, cache_len=cache_len)
+    )(params, batch)
+
+    step_fn = jax.jit(
+        lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
+    out = [np.asarray(prompts)]
+    tok = _sample(logits, key, temperature)
+    done = np.zeros(b, dtype=bool)
+    for i in range(max_new_tokens):
+        out.append(np.asarray(tok)[:, None])
+        if eos is not None:
+            done |= np.asarray(tok) == eos
+            if done.all():
+                pad = np.full((b, max_new_tokens - i - 1), eos, np.int32)
+                if pad.shape[1]:
+                    out.append(pad)
+                break
+        if i == max_new_tokens - 1:
+            break
+        key, sk = jax.random.split(key)
+        logits, cache = step_fn(params, cache, tok, jnp.int32(s + i))
+        tok = _sample(logits, sk, temperature)
+    return np.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching (slot pool)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    """Fixed B-slot decode pool with wave prefill."""
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int,
+                 cache_len: int, extras_fn=None):
+        self.cfg, self.params = cfg, params
+        self.b, self.cache_len = num_slots, cache_len
+        self.extras_fn = extras_fn or (lambda n: {})
+        self.cache = lm.init_cache(cfg, num_slots, cache_len)
+        self.cache_batch_dim = jax.tree.map(
+            lambda ax: parse_axes(ax).index("batch"), lm.cache_axes(cfg))
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.slot_pos = np.zeros(num_slots, dtype=np.int64)
+        self.last_tok = np.zeros(num_slots, dtype=np.int32)
+        self.queue: List[Request] = []
+        self._step = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
+        self._prefill = jax.jit(
+            lambda p, bt: lm.prefill(cfg, p, bt,
+                                     cache_len=self.cache_len))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit_wave(self):
+        free = self._free_slots()
+        wave = []
+        while free and self.queue:
+            wave.append((free.pop(0), self.queue.pop(0)))
+        if not wave:
+            return
+        maxlen = max(len(r.prompt) for _, r in wave)
+        toks = np.zeros((len(wave), maxlen), np.int32)
+        for i, (_, r) in enumerate(wave):
+            toks[i, maxlen - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks),
+                 **self.extras_fn(len(wave))}
+        logits, wave_cache = self._prefill(self.params, batch)
+        tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+        slots = [s for s, _ in wave]
+        self.cache = jax.tree.map(
+            lambda c, w, d: c.at[(slice(None),) * d +
+                                 (np.asarray(slots),)].set(
+                w.astype(c.dtype)),
+            self.cache, wave_cache, self.cache_batch_dim)
+        for i, (s, r) in enumerate(wave):
+            self.slot_req[s] = r
+            self.slot_pos[s] = maxlen
+            self.last_tok[s] = tok[i]
+            r.generated.append(int(tok[i]))
+
+    def step(self):
+        """One decode step for all active slots (+ admit new work)."""
+        self._admit_wave()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(self.last_tok), pos)
+        tok = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for s in active:
+            r = self.slot_req[s]
+            r.generated.append(int(tok[s]))
+            self.slot_pos[s] += 1
+            self.last_tok[s] = tok[s]
+            if len(r.generated) >= r.max_new or \
+                    self.slot_pos[s] >= self.cache_len - 1:
+                r.done = True
+                self.slot_req[s] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,2 @@
+from .rules import (DEFAULT_RULES, constrain, param_shardings, spec_for,
+                    tree_spec)  # noqa: F401

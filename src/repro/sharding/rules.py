@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation carries a tuple of *logical* axis names; a
+rule table maps logical → mesh axes.  ``spec_for`` drops mesh axes that
+are absent from the mesh (so the same model code runs on a single device,
+a (data, model) pod slice, or a (pod, data, model) multi-pod mesh) and
+refuses shardings that don't divide the dimension (falls back to
+replication for that dim rather than relying on padding).
+
+Default layout = FSDP × TP:
+  batch        → (pod, data)     activations
+  embed        → data            parameter d_model dim (ZeRO-3 style)
+  heads/mlp/vocab/expert → model tensor parallelism
+  kv_seq       → model           decode KV cache (flash-decoding style;
+                                 GQA kv_heads < |model| so we shard time)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tried in order; tuple = shard over several)
+# "embed"-class axes are GREEDY-FILL: resolved in a second pass so they
+# soak up whatever mesh axes the structured dims (heads/kv/mlp/vocab)
+# could not use — e.g. GQA kv_heads (1–8) never divides model=16, so
+# wk/wv would otherwise replicate 16× on the model axis (1.4 GB/chip at
+# 340B scale).
+_GREEDY = ("embed", "embed2")
+# "model2" entries are inert on the standard (data, model) mesh and give
+# the factored mesh (data, model=8, model2=2) full coverage: heads that
+# divide 8 but not 16 shard over "model", while mlp/vocab/... take both.
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data", "model", "model2"),
+    "embed2": ("data", "model", "model2"),
+    # kv projections keep embed on data ONLY: 2-D-sharding them fights the
+    # sharding GSPMD propagates from the attention einsums (kv_heads on a
+    # model sub-axis) and triggers "involuntary full rematerialization" —
+    # 2×10 GiB f32 all-gathers of the stacked kv weights at 340B scale.
+    "embed_kv": ("data",),
+    "heads": ("model", "model2"),
+    "kv_heads": ("model", "model2"),
+    "mlp": ("model", "model2"),
+    "vocab": ("model", "model2"),
+    "expert": ("model", "model2"),
+    "kv_seq": ("model", "model2"),
+    "seq": (),
+    "seq_model": ("model", "model2"),  # sequence-parallel boundary
+    "head_dim": (),
+    "qk_dim": (),
+    "state": (),
+    "layers": (),
+    "conv": (),
+    "lora": (),
+    "capacity": (),
+    "enc_seq": (),
+    "img_seq": (),
+    "stack": (),
+    "norm": (),
+}
+
+
+def parse_axes(axes) -> Tuple[Optional[str], ...]:
+    """Axes are spelled as a space-separated string so they are pytree
+    LEAVES (tuples would be treated as nodes by jax.tree.map).  '.' = None.
+    e.g. "embed heads head_dim"."""
+    if isinstance(axes, str):
+        return tuple(None if a == "." else a for a in axes.split())
+    return tuple(axes)
+
+
+def spec_for(shape: Sequence[int], axes, mesh: Mesh,
+             rules: Optional[Dict] = None) -> P:
+    """Build a PartitionSpec for ``shape`` whose dims are named ``axes``.
+
+    Two-phase: structured dims first (heads/mlp/vocab/...), then the
+    greedy-fill dims ("embed") claim any mesh axes still unused — so a
+    kv_heads=8 weight still ends up 256-way sharded via its embed dim."""
+    rules = rules or DEFAULT_RULES
+    axes = parse_axes(axes)
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    parts: list = [None] * len(shape)
+
+    def assign(i, dim, name):
+        mesh_axes = rules.get(name, ())
+        picked = []
+        extent = 1
+        for ax in mesh_axes:
+            if ax in mesh.shape and ax not in used:
+                if dim % (extent * mesh.shape[ax]) == 0:
+                    picked.append(ax)
+                    extent *= mesh.shape[ax]
+                    used.add(ax)
+        if picked:
+            parts[i] = tuple(picked) if len(picked) > 1 else picked[0]
+
+    for i, (dim, name) in enumerate(zip(shape, axes)):
+        if name is not None and name not in _GREEDY:
+            assign(i, dim, name)
+    for i, (dim, name) in enumerate(zip(shape, axes)):
+        if name in _GREEDY:
+            assign(i, dim, name)
+    return P(*parts)
+
+
+def tree_spec(params, param_axes, mesh: Mesh,
+              rules: Optional[Dict] = None):
+    """Map a (params, axes-string) pytree pair to a PartitionSpec pytree."""
+    return jax.tree.map(
+        lambda p, a: spec_for(np.shape(p), a, mesh, rules),
+        params, param_axes)
+
+
+def param_shardings(params, param_axes, mesh: Mesh,
+                    rules: Optional[Dict] = None):
+    specs = tree_spec(params, param_axes, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        env = jax.interpreters.pxla.thread_resources.env
+        m = env.physical_mesh
+        if m.empty:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def constrain(x, axes: Sequence[Optional[str]],
+              rules: Optional[Dict] = None):
+    """Best-effort activation sharding constraint.  No-op without a mesh
+    context (single-device tests)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,1 @@
+from . import compress, loop, optimizer, step  # noqa: F401

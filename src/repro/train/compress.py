@@ -1,0 +1,58 @@
+"""Int8 gradient/delta compression with error feedback.
+
+Used on the cross-pod synchronization path (local-SGD outer loop and the
+optional compressed DP all-reduce): 4× less ICI/DCN traffic per sync.
+Error feedback keeps the quantization noise from accumulating — the
+residual of each round is added back before the next quantization, giving
+unbiased long-run updates (Seide et al. / EF-SGD).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(tree, error):
+    """Quantize a pytree with error feedback.  Returns (q_tree, scales,
+    new_error).  ``error`` is the residual pytree from the previous round
+    (zeros initially)."""
+    def one(x, e):
+        corrected = x.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return q, s, corrected - deq
+
+    out = jax.tree.map(one, tree, error)
+    is3 = lambda t: isinstance(t, tuple)  # noqa: E731
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    err = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return q, s, err
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(dequantize, q, s)
+
+
+def zeros_error(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def compressed_bytes(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree)) + \
+        8 * len(jax.tree.leaves(tree))

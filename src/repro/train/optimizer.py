@@ -1,0 +1,212 @@
+"""Native optimizers (no external deps): AdamW and Adafactor, plus
+global-norm clipping and warmup-cosine schedules.
+
+Adafactor (factored second moment, no first moment by default) is the
+default for ≥100B configs — Adam's m/v in f32 would not fit 16 GB/chip at
+340B scale even fully sharded (see DESIGN.md §8).
+
+State pytrees mirror the parameter pytree, so parameter sharding specs
+apply directly (factored stats drop the factored axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.rules import parse_axes
+
+
+# ---------------------------------------------------------------------------
+# schedules / clipping
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+
+    def init(self, params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def state_axes(self, param_axes):
+        return {"m": param_axes, "v": param_axes, "count": ""}
+
+    def update(self, grads, state, params):
+        grads, gn = clip_by_global_norm(grads, self.clip)
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        bc1 = 1 - self.b1 ** cf
+        bc2 = 1 - self.b2 ** cf
+        lr = self.lr(c)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        m = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        new_p = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": m, "v": v, "count": c}, {"grad_norm": gn,
+                                                     "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), beta1=0 variant
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+# leaves bigger than this are updated slice-by-slice along axis 0 with
+# lax.map — the f32 update chain on a stacked (96, 1152, 4608) leaf would
+# otherwise hold multiple ~2 GB/chip transients at 340B scale
+_CHUNK_UPDATE_ELEMS = 32 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr: Callable
+    decay: float = 0.8          # \hat{beta2}_t = 1 - t^-decay
+    eps: float = 1e-30
+    clip_update: float = 1.0    # update RMS clip (d in the paper)
+    weight_decay: float = 0.0
+    clip: float = 1.0
+
+    def init(self, params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"stats": jax.tree.map(one, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def state_axes(self, param_axes):
+        def one(ax):
+            axes = parse_axes(ax)
+            if len(axes) >= 2:
+                def j(t):
+                    return " ".join("." if a is None else a for a in t)
+                return {"vr": j(axes[:-1]), "vc": j(axes[:-2] + axes[-1:])}
+            return {"v": ax}
+        return {"stats": jax.tree.map(one, param_axes), "count": ""}
+
+    def update(self, grads, state, params):
+        grads, gn = clip_by_global_norm(grads, self.clip)
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        beta2 = 1.0 - cf ** (-self.decay)
+        lr = self.lr(c)
+
+        def upd_one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if _factored(g.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+                vr_hat = vr / denom                     # (..., A)
+                u = g * jax.lax.rsqrt(vr_hat)[..., None] \
+                    * jax.lax.rsqrt(vc)[..., None, :]
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_update)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return ns, (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        # NOTE: an attempted lax.map-over-layer-slices here (to cap the f32
+        # update-chain transients) backfired badly under GSPMD: the map
+        # body re-decided shardings and inserted 2×10 GiB full all-gathers
+        # of the stacked kv weights.  Hypothesis→refuted; recorded in
+        # EXPERIMENTS.md §Perf.  Instead, LEAF UPDATES ARE SERIALIZED with
+        # optimization_barrier: independent leaves would otherwise be
+        # scheduled concurrently and their f32 update-chain transients
+        # coexist (Σ leaves instead of max leaf — ~8 GB/chip at 340B).
+
+        def is_stat(t):
+            return isinstance(t, dict) and set(t) in ({"v"}, {"vr", "vc"})
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        s_leaves = treedef.flatten_up_to(
+            jax.tree.map(lambda s: s, state["stats"], is_leaf=is_stat))
+        p_leaves = jax.tree_util.tree_leaves(params)
+        # big leaves last, serialized among themselves
+        order = sorted(range(len(g_leaves)),
+                       key=lambda i: g_leaves[i].size)
+        ns_list = [None] * len(g_leaves)
+        np_list = [None] * len(g_leaves)
+        token = None
+        for i in order:
+            g = g_leaves[i]
+            if token is not None and g.size > 2 ** 20:
+                # all barrier inputs must be ready before any output is:
+                # leaf i's chain cannot start until leaf i-1 finished
+                g, _ = jax.lax.optimization_barrier((g, token))
+            ns, pn = upd_one(g, s_leaves[i], p_leaves[i])
+            if pn.size > 2 ** 20:
+                token = pn
+            ns_list[i], np_list[i] = ns, pn
+        stats = jax.tree_util.tree_unflatten(treedef, ns_list)
+        new_p = jax.tree_util.tree_unflatten(treedef, np_list)
+        return new_p, {"stats": stats, "count": c}, {"grad_norm": gn,
+                                                     "lr": lr}
+
+
+def make_optimizer(name: str, lr_fn: Callable, **kw):
+    if name == "adamw":
+        return AdamW(lr=lr_fn, **kw)
+    if name == "adafactor":
+        return Adafactor(lr=lr_fn, **kw)
+    raise ValueError(name)
+
+
+_ = (Any, Dict, Optional, Tuple)

@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py
+oracles vs dense numpy ground truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import semiring as sr
+from repro.kernels import ops, ref
+
+SEMIRINGS = ["plus_times", "min_plus", "max_min", "min_select"]
+
+
+def _dense_spmv(a, x, name):
+    if name == "plus_times":
+        return a @ x
+    if name == "min_plus":
+        return np.min(a + x[None, :], axis=1)
+    if name == "max_min":
+        return np.max(np.minimum(a, x[None, :]), axis=1)
+    return np.min(np.where(np.isfinite(a), x[None, :], np.inf), axis=1)
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("n,e,b,bk", [(64, 256, 8, 2), (200, 800, 16, 4),
+                                      (120, 900, 32, 8)])
+def test_bsr_spmv_sweep(semiring, n, e, b, bk, rng):
+    g = G.rmat(n, e, seed=n + e)
+    bsr = G.to_bsr(g, b=b, pad_value=float(sr.get(semiring).zero))
+    x = rng.random((bsr.r, bsr.b)).astype(np.float32)
+    if semiring == "max_min":
+        x = (x > 0.5).astype(np.float32)
+    args = (jnp.asarray(bsr.block_vals), jnp.asarray(bsr.block_cols),
+            jnp.asarray(bsr.block_nnz), jnp.asarray(x))
+    y_ref = ops.bsr_spmv(*args, semiring=semiring, impl="ref")
+    y_pal = ops.bsr_spmv(*args, semiring=semiring, impl="pallas", bk=bk)
+    dense = _dense_spmv(G.bsr_to_dense(bsr), x.reshape(-1), semiring)
+    np.testing.assert_allclose(np.asarray(y_ref).reshape(-1), dense,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_pal).reshape(-1), dense,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+@pytest.mark.parametrize("b,h,kv,s,d", [(2, 4, 2, 256, 64),
+                                        (1, 2, 1, 128, 32)])
+def test_flash_attention_sweep(dtype, causal, window, b, h, kv, s, d, rng):
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, kv, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, kv, s, d)), dtype)
+    o_ref = ops.attention(q, k, v, causal=causal, window=window,
+                          impl="ref")
+    o_pal = ops.attention(q, k, v, causal=causal, window=window,
+                          impl="pallas", bq=64, bk=64)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pal, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_chunked_attention_matches_exact(rng):
+    b, h, s, d = 1, 2, 2048, 32
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    exact = ref.mha_ref(q, k, v, causal=True)
+    chunk = ref.mha_chunked(q, k, v, causal=True, q_chunk=256)
+    np.testing.assert_allclose(np.asarray(exact), np.asarray(chunk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bsr_padding_is_noop(rng):
+    """Padding tiles hold ⊕-identities: adding empty tiles never changes
+    the result (the kernel's 'empty FIFO slot' invariant)."""
+    g = G.rmat(50, 200, seed=3)
+    for name in SEMIRINGS:
+        z = float(sr.get(name).zero)
+        bsr = G.to_bsr(g, b=8, pad_value=z)
+        x = rng.random((bsr.r, bsr.b)).astype(np.float32)
+        y0 = ops.bsr_spmv(jnp.asarray(bsr.block_vals),
+                          jnp.asarray(bsr.block_cols),
+                          jnp.asarray(bsr.block_nnz), jnp.asarray(x),
+                          semiring=name, impl="ref")
+        # append 2 extra all-padding tile slots per row
+        pad_v = np.full((bsr.r, 2, 8, 8), z, np.float32)
+        vals = np.concatenate([bsr.block_vals, pad_v], axis=1)
+        cols = np.concatenate([bsr.block_cols,
+                               np.zeros((bsr.r, 2), np.int32)], axis=1)
+        y1 = ops.bsr_spmv(jnp.asarray(vals), jnp.asarray(cols),
+                          jnp.asarray(bsr.block_nnz), jnp.asarray(x),
+                          semiring=name, impl="ref")
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=1e-6)
+
+
+def test_pallas_respects_nnz_bound(rng):
+    """Garbage beyond block_nnz must not affect the Pallas result
+    (self-timed execution: only true tiles are combined)."""
+    g = G.rmat(60, 240, seed=4)
+    bsr = G.to_bsr(g, b=8, pad_value=np.inf)  # min_plus
+    vals = bsr.block_vals.copy()
+    lane = np.arange(bsr.k_max)[None, :]
+    trash = lane >= bsr.block_nnz[:, None]
+    vals[np.broadcast_to(trash[:, :, None, None], vals.shape)] = -123.0
+    x = rng.random((bsr.r, bsr.b)).astype(np.float32)
+    y_pal = ops.bsr_spmv(jnp.asarray(vals), jnp.asarray(bsr.block_cols),
+                         jnp.asarray(bsr.block_nnz), jnp.asarray(x),
+                         semiring="min_plus", impl="pallas", bk=4)
+    dense = _dense_spmv(G.bsr_to_dense(bsr), x.reshape(-1), "min_plus")
+    np.testing.assert_allclose(np.asarray(y_pal).reshape(-1), dense,
+                               rtol=1e-5, atol=1e-5)
+
+
+_ = jax
