@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + CPU smoke of the session-API
+# quickstart.  Mirrors .github/workflows/ci.yml for local use.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== quickstart smoke (CPU) =="
+python examples/quickstart.py
+
+echo "CI OK"

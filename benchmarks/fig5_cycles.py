@@ -36,5 +36,7 @@ def run(graphs=None, emit=common.csv_line):
                              sweeps_async=rep["async_stats"].sweeps,
                              sweeps_sync=rep["sync_stats"].sweeps,
                              edge_work_async=rep["async_stats"].edge_work,
-                             edge_work_sync=rep["sync_stats"].edge_work))
+                             edge_work_sync=rep["sync_stats"].edge_work,
+                             crit_tiles_async=rep["async_stats"].crit_tiles,
+                             crit_tiles_sync=rep["sync_stats"].crit_tiles))
     return rows

@@ -6,6 +6,10 @@ the paper's headline claims:
   * 2–5× better power efficiency vs a GPU (modeled, Fig. 6)
 and the directly MEASURED async-vs-sync work reduction the claims rest on.
 
+A machine-readable snapshot (per-algorithm sweeps, edge_work, crit_tiles,
+modeled speedups) is written to ``BENCH_graph.json`` by default so later
+PRs have a perf trajectory to diff against; ``--json ''`` disables it.
+
   PYTHONPATH=src python -m benchmarks.run [--scale 1/256] [--json out]
 """
 
@@ -25,17 +29,21 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=common.SCALE,
                     help="fraction of full paper graph size (default "
                          "1/256; 1.0 = paper scale)")
-    ap.add_argument("--json", default=None)
+    ap.add_argument("--json", default="BENCH_graph.json",
+                    help="output path for the machine-readable snapshot "
+                         "('' disables)")
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["fig5", "fig6", "avs", "kernel", "lm"])
     args = ap.parse_args()
 
     graphs = common.load_graphs(args.scale)
+    out = {"meta": {"scale": args.scale,
+                    "graphs": {name: dict(n=g.n, nnz=g.nnz,
+                                          avg_degree=g.avg_degree)
+                               for name, g in graphs.items()}}}
     for name, g in graphs.items():
         common.csv_line(f"graph/{name}", 0.0,
                         f"n={g.n} nnz={g.nnz} avg_deg={g.avg_degree:.2f}")
-
-    out = {}
     if "fig5" not in args.skip:
         out["fig5"] = fig5_cycles.run(graphs)
     if "fig6" not in args.skip:
@@ -72,6 +80,7 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1, default=float)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == '__main__':

@@ -1,6 +1,9 @@
 """Graph analytics sweep — the paper's six algorithms on all three
 workloads with the platform models; a compact reproduction of Fig. 5/6.
 
+One ``GraphProcessor`` session per graph (via benchmarks.common): all six
+algorithms and both engine modes share each graph's cached plans.
+
   PYTHONPATH=src python examples/graph_analytics.py [--scale 0.004]
 """
 
@@ -29,6 +32,9 @@ def main():
                   f"{cpu.cycles:11.3g} {gpu.cycles:11.3g} "
                   f"{cpu.time_s/nale.time_s:6.1f}x "
                   f"{nale.perf_per_watt/gpu.perf_per_watt:13.1f}x")
+        info = common.processor(g).cache_info()
+        print(f"{gname:5s} session: {info['plans']} cached plans served "
+              f"all algorithms/modes above")
 
 
 if __name__ == "__main__":

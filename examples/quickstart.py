@@ -1,29 +1,32 @@
 """Quickstart: the asynchronous graph processor on a road network.
 
-Runs the paper's full pipeline on a CA-road-like graph: profile →
-cluster → compile-to-ISA → execute on the async engine, then compares
-against the bulk-synchronous baseline and prints the modeled NALE/CPU/GPU
-numbers (Fig. 5/6 of the paper, scaled down).
+Session flow (paper Fig. 4 split): construct a ``GraphProcessor`` once —
+profile → cluster → analyze → place happen lazily, once per plan — then
+issue many queries against the cached device-resident image, compare the
+paper's two models of computation, and print the modeled NALE/CPU/GPU
+numbers (Fig. 5/6, scaled down).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import algorithms as A
+from repro import api
 from repro.core import compile as GC
 from repro.core import graph as G
 from repro.core import oracles as O
-from repro.core import power as PW
 
 # 1. workload: a road network (sparse, high diameter — the hard case)
 g = G.make_paper_graph("ca", scale=1 / 512, seed=0)
 print(f"graph: {g.n} vertices, {g.nnz} edges, avg degree "
       f"{g.avg_degree:.2f}")
 
-# 2. the paper's two models of computation
-res_async = A.sssp(g, src=0, mode="async", b=16, num_clusters=64)
-res_sync = A.sssp(g, src=0, mode="sync", b=16, num_clusters=64)
+# 2. one session, many queries: the compile-time pipeline runs once per
+#    plan and is shared by every query that can use it
+proc = api.GraphProcessor(g, b=16, num_clusters=64)
+res_async = proc.sssp(0)   # default policy: the paper's async engine
+res_sync = proc.sssp(0, policy=api.ExecutionPolicy(mode="sync",
+                                                   max_sweeps=100_000))
 assert np.allclose(res_async.values, O.sssp_oracle(g, 0), rtol=1e-5,
                    atol=1e-4)
 print(f"\nSSSP  async: {res_async.stats.sweeps} sweeps, "
@@ -34,7 +37,14 @@ print(f"→ self-timed execution does "
       f"{res_sync.stats.edge_work / res_async.stats.edge_work:.2f}x "
       f"less work than the global-clock baseline")
 
-# 3. the compilation pipeline (Fig. 4): clustering → placement → ISA
+# 3. batched multi-source queries: one vmap'd run, one cached plan
+multi = proc.sssp(sources=[0, g.n // 2, g.n - 1])
+print(f"\nbatched SSSP from 3 sources: values {multi.values.shape}, "
+      f"{multi.stats.sweeps} sweeps (straggler), one compile")
+print(f"plan cache: {proc.cache_info()['plans']} plans for "
+      f"{proc.cache_info()['prepare_calls']} prepare calls")
+
+# 4. the compilation pipeline (Fig. 4): clustering → placement → ISA
 p = res_async.prepared
 c = p.clustering
 print(f"\nclustering: {c.num_clusters} clusters, cut fraction "
@@ -44,12 +54,9 @@ print(f"compiled {prog.total_instructions()} ISA instructions; "
       f"cluster 1 program head:")
 print(prog.programs[1].disassemble(limit=6))
 
-# 4. modeled platforms (constants in core/power.py)
-nale = PW.model_nale(p, res_async.stats)
-cpu = PW.model_cpu(p, res_async.stats)
-gpu = PW.model_gpu(p, res_sync.stats,
-                   k_max_pad=float(np.diff(g.indptr).max()),
-                   avg_degree=g.avg_degree)
+# 5. modeled platforms (constants in core/power.py) via the Result bundle
+models = res_async.platform_models(sync_stats=res_sync.stats)
+nale, cpu, gpu = models["nale"], models["cpu"], models["gpu"]
 print(f"\nmodeled cycles: NALE {nale.cycles:.3g}  CPU {cpu.cycles:.3g} "
       f"({cpu.time_s / nale.time_s:.1f}x)  GPU {gpu.cycles:.3g}")
 print(f"modeled power : NALE {nale.power_w:.2f} W  CPU {cpu.power_w:.2f} "
@@ -57,8 +64,12 @@ print(f"modeled power : NALE {nale.power_w:.2f} W  CPU {cpu.power_w:.2f} "
 print(f"perf/W vs GPU : "
       f"{nale.perf_per_watt / gpu.perf_per_watt:.1f}x")
 
-# 5. PageRank on the same clustered image
-pr = A.pagerank(g, mode="async", tol=1e-8)
+# 6. PageRank on the same session — a different semiring plan, same
+#    clustering work pattern, zero graph re-upload between repeat queries
+pr = proc.pagerank()
+pr2 = proc.pagerank()
+assert pr2.prepared is pr.prepared  # cache hit: no re-clustering
 print(f"\nPageRank async: {pr.stats.sweeps} sweeps; top vertex "
       f"{int(np.argmax(pr.values))} (mass {pr.values.max():.2e}); "
       f"Σ={pr.values.sum():.6f}")
+print(f"session now holds {proc.cache_info()['plans']} cached plans")

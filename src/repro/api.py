@@ -1,0 +1,18 @@
+"""Public session API — ``repro.api``.
+
+Prepare-once / query-many graph processing (see ``core/api.py``):
+
+    from repro import api
+    proc = api.GraphProcessor(g, b=16, num_clusters=64)
+    pr = proc.pagerank()
+    d = proc.sssp(sources=[0, 5, 9])          # batched, one compile
+    fast = api.ExecutionPolicy(mode="async", impl="pallas")
+    d2 = proc.sssp(0, policy=fast)
+"""
+
+from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
+                       QuerySpec, Result)
+from .core.engine import Prepared, RunStats  # noqa: F401
+
+__all__ = ["ExecutionPolicy", "GraphProcessor", "PlanKey", "QuerySpec",
+           "Result", "Prepared", "RunStats"]

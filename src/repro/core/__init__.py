@@ -9,5 +9,5 @@
 #   power          — cycle & energy models for NALE / CPU / GPU classes
 #   placement      — multi-device halo-exchange engine (shard_map)
 
-from . import algorithms, cluster, compile, engine, graph, isa, oracles, \
-    placement, power, semiring  # noqa: F401
+from . import algorithms, api, cluster, compile, engine, graph, isa, \
+    oracles, placement, power, semiring  # noqa: F401

@@ -1,243 +1,79 @@
-"""The paper's six benchmark algorithms on the graph engines.
+"""The paper's six benchmark algorithms — back-compat free functions.
 
-SSSP, BFS, PageRank and CC run on the clustered BSR engines (sync or
-async); MiniTri and DFS have their own data-parallel / sequential
-formulations (triangle counting is a one-shot intersection workload; DFS
-is inherently sequential and is included — as in the paper — to show the
-architecture's behaviour on a worst-case-serial algorithm).
+These are thin wrappers over the session API (``core/api.py``): each call
+builds a single-query ``GraphProcessor`` session.  Code that issues many
+queries against one graph should construct the processor directly so the
+compile-time pipeline (cluster → permute → BSR build → upload) is paid
+once and shared across queries:
+
+    from repro import api
+    proc = api.GraphProcessor(g, b=16, num_clusters=64)
+    proc.pagerank(); proc.sssp(0); proc.sssp(sources=[1, 2, 3])
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from . import api as _api
+from .api import ExecutionPolicy, Result
+from .graph import Graph
 
-from . import engine as eng
-from .graph import Graph, to_ell_fast
-
-
-@dataclasses.dataclass
-class AlgoResult:
-    values: np.ndarray          # per-vertex output, ORIGINAL vertex ids
-    stats: eng.RunStats
-    prepared: Optional[eng.Prepared]
-    extra: dict
+# the old result type is the new uniform one (same leading fields)
+AlgoResult = Result
 
 
-def _run(p: eng.Prepared, x0, apply_kind, mode, **kw):
-    if mode == "async":
-        return eng.run_async(p, x0, apply_kind=apply_kind, **kw)
-    return eng.run_sync(p, x0, apply_kind=apply_kind, **kw)
-
-
-# ---------------------------------------------------------------------------
+def _proc(g: Graph, b: int, num_clusters, clustered) -> _api.GraphProcessor:
+    return _api.GraphProcessor(g, b=b, num_clusters=num_clusters,
+                               clustered=clustered)
 
 
 def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-8,
              mode: str = "async", b: int = 32,
              num_clusters: Optional[int] = None, clustered: bool = True,
-             max_sweeps: int = 500) -> AlgoResult:
-    p = eng.prepare(g, "plus_times", b=b, num_clusters=num_clusters,
-                    pull=True, clustered=clustered,
-                    normalize="out_stochastic")
-    x0 = p.to_blocks(np.full(g.n, 1.0 / g.n, dtype=np.float32), 0.0)
-    x, stats = _run(p, x0, "pagerank", mode, damping=damping, tol=tol,
-                    max_sweeps=max_sweeps)
-    v = p.from_blocks(x)
-    v = v / max(v.sum(), 1e-30)  # dangling-drop semantics: L1 renormalize
-    return AlgoResult(v, stats, p, {})
+             max_sweeps: int = 500, impl: str = "ref") -> AlgoResult:
+    pol = ExecutionPolicy(mode=mode, impl=impl, damping=damping, tol=tol,
+                          max_sweeps=max_sweeps)
+    return _proc(g, b, num_clusters, clustered).pagerank(policy=pol)
 
 
 def sssp(g: Graph, src: int, mode: str = "async", b: int = 32,
          num_clusters: Optional[int] = None, clustered: bool = True,
-         max_sweeps: int = 100_000) -> AlgoResult:
-    p = eng.prepare(g, "min_plus", b=b, num_clusters=num_clusters,
-                    pull=True, clustered=clustered)
-    x0f = np.full(g.n, np.inf, dtype=np.float32)
-    x0f[src] = 0.0
-    x0 = p.to_blocks(x0f, np.inf)
-    changed0 = None
-    if mode == "async":
-        ch = np.zeros(p.r_pad, dtype=bool)
-        ch[int(p.perm[src]) // p.b] = True
-        changed0 = jnp.asarray(ch)
-    x, stats = _run(p, x0, "relax", mode, max_sweeps=max_sweeps,
-                    **({"changed0": changed0} if mode == "async" else {}))
-    return AlgoResult(p.from_blocks(x), stats, p, {"src": src})
+         max_sweeps: int = 100_000, impl: str = "ref") -> AlgoResult:
+    pol = ExecutionPolicy(mode=mode, impl=impl, max_sweeps=max_sweeps)
+    return _proc(g, b, num_clusters, clustered).sssp(src, policy=pol)
 
 
 def bfs(g: Graph, src: int, mode: str = "async", b: int = 32,
         num_clusters: Optional[int] = None, clustered: bool = True,
-        max_sweeps: int = 100_000) -> AlgoResult:
-    g1 = Graph(n=g.n, indptr=g.indptr, indices=g.indices,
-               weights=np.ones(g.nnz, dtype=np.float32))
-    res = sssp(g1, src, mode=mode, b=b, num_clusters=num_clusters,
-               clustered=clustered, max_sweeps=max_sweeps)
-    res.extra["levels"] = res.values
-    return res
+        max_sweeps: int = 100_000, impl: str = "ref") -> AlgoResult:
+    pol = ExecutionPolicy(mode=mode, impl=impl, max_sweeps=max_sweeps)
+    return _proc(g, b, num_clusters, clustered).bfs(src, policy=pol)
 
 
 def connected_components(g: Graph, mode: str = "async", b: int = 32,
                          num_clusters: Optional[int] = None,
                          clustered: bool = True,
-                         max_sweeps: int = 100_000) -> AlgoResult:
-    und = g.to_undirected()
-    p = eng.prepare(und, "min_select", b=b, num_clusters=num_clusters,
-                    pull=True, clustered=clustered)
-    # label = own (new) id; fixpoint = min reachable new id
-    x0f = p.perm.astype(np.float32)
-    x0 = p.to_blocks(x0f, np.inf)
-    x, stats = _run(p, x0, "relax", mode, max_sweeps=max_sweeps)
-    return AlgoResult(p.from_blocks(x), stats, p, {})
+                         max_sweeps: int = 100_000,
+                         impl: str = "ref") -> AlgoResult:
+    pol = ExecutionPolicy(mode=mode, impl=impl, max_sweeps=max_sweeps)
+    return _proc(g, b, num_clusters,
+                 clustered).connected_components(policy=pol)
 
 
 def reachability(g: Graph, src: int, mode: str = "sync", b: int = 32,
                  num_clusters: Optional[int] = None,
-                 clustered: bool = True,
-                 max_sweeps: int = 100_000) -> AlgoResult:
+                 clustered: bool = True, max_sweeps: int = 100_000,
+                 impl: str = "ref") -> AlgoResult:
     """Boolean or_and reachability from src (max_min on {0,1})."""
-    g1 = Graph(n=g.n, indptr=g.indptr, indices=g.indices,
-               weights=np.ones(g.nnz, dtype=np.float32))
-    p = eng.prepare(g1, "max_min", b=b, num_clusters=num_clusters,
-                    pull=True, clustered=clustered)
-    x0f = np.zeros(g.n, dtype=np.float32)
-    x0f[src] = 1.0
-    x0 = p.to_blocks(x0f, 0.0)
-    x, stats = _run(p, x0, "relax", mode, max_sweeps=max_sweeps)
-    return AlgoResult(p.from_blocks(x), stats, p, {"src": src})
-
-
-# ---------------------------------------------------------------------------
-# MiniTri — triangle counting:  Δ = Σ_{(u,v)∈E⁺} |N⁺(u) ∩ N⁺(v)|
-# ---------------------------------------------------------------------------
-
-
-@jax.jit
-def _tri_count(rows: jnp.ndarray, eu: jnp.ndarray, ev: jnp.ndarray,
-               sentinel: jnp.int32) -> jnp.ndarray:
-    """rows: (n+1, k) sorted neighbour ids padded with `sentinel`; (eu, ev)
-    oriented edges.  Batched sorted-intersection via searchsorted."""
-
-    def one(u, v):
-        a, bb = rows[u], rows[v]
-        pos = jnp.searchsorted(bb, a)
-        pos = jnp.clip(pos, 0, bb.shape[0] - 1)
-        hit = (bb[pos] == a) & (a != sentinel)
-        return jnp.sum(hit)
-
-    return jnp.sum(jax.vmap(one)(eu, ev))
+    pol = ExecutionPolicy(mode=mode, impl=impl, max_sweeps=max_sweeps)
+    return _proc(g, b, num_clusters, clustered).reachability(src,
+                                                             policy=pol)
 
 
 def minitri(g: Graph, chunk: int = 65536) -> AlgoResult:
-    und = g.to_undirected()
-    deg = und.out_degrees()
-    src = np.repeat(np.arange(und.n, dtype=np.int64), np.diff(und.indptr))
-    dst = und.indices.astype(np.int64)
-    # orient low→high (degree, id): DAG with small max out-degree
-    key_s = deg[src] * (und.n + 1) + src
-    key_d = deg[dst] * (und.n + 1) + dst
-    keep = key_s < key_d
-    s2, d2 = src[keep], dst[keep]
-    g_plus = Graph.from_edges(und.n, s2.astype(np.int32),
-                              d2.astype(np.int32),
-                              np.ones(len(s2), dtype=np.float32))
-    ell = to_ell_fast(g_plus)
-    rows = np.vstack([ell.cols, np.full((1, ell.k_max), und.n,
-                                        dtype=np.int32)])  # +sentinel row
-    eu = np.repeat(np.arange(und.n, dtype=np.int32),
-                   np.diff(g_plus.indptr))
-    ev = g_plus.indices.astype(np.int32)
-    rows_j = jnp.asarray(rows)
-    total = 0
-    for i in range(0, len(eu), chunk):
-        total += int(_tri_count(rows_j, jnp.asarray(eu[i:i + chunk]),
-                                jnp.asarray(ev[i:i + chunk]),
-                                jnp.int32(und.n)))
-    e_plus = len(eu)
-    # one-shot data-parallel workload: intersections distribute evenly
-    # over the NALE array (no dependency chain), so the critical path is
-    # total work / array width, not the serial stream
-    nales = 256.0
-    stats = eng.RunStats(
-        sweeps=1, converged=True,
-        tile_work=float(e_plus * ell.k_max),
-        edge_work=float(e_plus * max(ell.k_max, 1)),
-        crit_tiles=float(e_plus * ell.k_max) / nales,
-        active_group_sweeps=nales, halo_tiles=0.0, total_groups=1,
-        mode="oneshot")
-    return AlgoResult(np.array([total]), stats, None,
-                      {"triangles": total, "oriented_edges": e_plus,
-                       "k_max": ell.k_max})
-
-
-# ---------------------------------------------------------------------------
-# DFS — sequential stack machine (worst case for any parallel substrate)
-# ---------------------------------------------------------------------------
+    return _api.GraphProcessor(g).minitri(chunk=chunk)
 
 
 def dfs(g: Graph, src: int) -> AlgoResult:
-    ell = to_ell_fast(g)
-    n, k = g.n, ell.k_max
-    cols = jnp.asarray(ell.cols)  # pad = n
-
-    cap = g.nnz + n + 2
-
-    @jax.jit
-    def run():
-        stack = jnp.zeros(cap, dtype=jnp.int32).at[0].set(src)
-        pstack = jnp.full(cap, -1, dtype=jnp.int32)
-        visited = jnp.zeros(n + 1, dtype=bool).at[n].set(True)
-        order = jnp.full(n, -1, dtype=jnp.int32)
-        parent = jnp.full(n, -1, dtype=jnp.int32)
-
-        def cond(st):
-            sp, *_ = st
-            return sp > 0
-
-        def body(st):
-            sp, stack, pstack, visited, order, parent, cnt = st
-            u = stack[sp - 1]
-            pu = pstack[sp - 1]
-            sp = sp - 1
-            fresh = ~visited[u]
-
-            def visit(args):
-                sp, stack, pstack, visited, order, parent, cnt = args
-                visited = visited.at[u].set(True)
-                order = order.at[cnt].set(u)
-                parent = parent.at[u].set(pu)
-                # push neighbours in reverse so lowest pops first
-                def push(i, a):
-                    sp, stack, pstack = a
-                    v = cols[u, k - 1 - i]
-                    ok = ~visited[v]
-                    stack = stack.at[sp].set(jnp.where(ok, v, stack[sp]))
-                    pstack = pstack.at[sp].set(jnp.where(ok, u, pstack[sp]))
-                    return sp + ok.astype(jnp.int32), stack, pstack
-                sp, stack, pstack = jax.lax.fori_loop(
-                    0, k, push, (sp, stack, pstack))
-                return sp, stack, pstack, visited, order, parent, cnt + 1
-
-            return jax.lax.cond(
-                fresh, visit, lambda a: a,
-                (sp, stack, pstack, visited, order, parent, cnt))
-
-        st = (jnp.int32(1), stack, pstack, visited, order, parent,
-              jnp.int32(0))
-        sp, stack, pstack, visited, order, parent, cnt = \
-            jax.lax.while_loop(cond, body, st)
-        return order, parent, cnt
-
-    order, parent, cnt = run()
-    stats = eng.RunStats(
-        sweeps=int(cnt), converged=True,
-        tile_work=float(int(cnt) * k), edge_work=float(g.nnz),
-        crit_tiles=float(int(cnt) * k), active_group_sweeps=float(int(cnt)),
-        halo_tiles=0.0, total_groups=1, mode="sequential")
-    return AlgoResult(np.asarray(order), stats, None,
-                      {"parent": np.asarray(parent),
-                       "visited_count": int(cnt)})
+    return _api.GraphProcessor(g).dfs(src)

@@ -1,0 +1,515 @@
+"""Session API — prepare once, query many (paper Fig. 4 split).
+
+The paper separates *compile-time* work (profile → cluster → analyze →
+place) from *run-time* execution on the self-timed NALE array.
+``GraphProcessor`` is that split as an API: constructing one builds the
+session; each query then runs against cached ``Prepared`` images — the
+clustering/permutation and the device-resident BSR tiles are shared by
+every algorithm that can use the same plan (keyed by semiring, graph
+variant, direction, normalization and tiling), so serving many queries on
+one graph pays the compile-time pipeline once.  PIUMA and GraphScale
+expose the same load-once / query-many shape.
+
+    proc = GraphProcessor(g, b=16, num_clusters=64)
+    pr   = proc.pagerank()                       # prepares plus_times plan
+    d    = proc.sssp(0)                          # prepares min_plus plan
+    d2   = proc.sssp(5)                          # plan-cache hit: no rework
+    dist = proc.sssp(sources=[0, 5, 9])          # batched: one vmap'd run
+
+Execution is controlled by one ``ExecutionPolicy`` (engine mode, kernel
+impl, convergence knobs) instead of per-function keyword scatter; every
+query returns a uniform ``Result`` bundling per-vertex values, the
+engine's measured ``RunStats``, and (via ``platform_models``) the
+analytical NALE/CPU/GPU cycle & power models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine as eng
+from .engine import Prepared, RunStats
+from .graph import Graph, to_ell_fast
+
+MODES = ("sync", "async", "distributed")
+IMPLS = ("ref", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How a query executes — one object for the knobs that used to be
+    scattered across the ``algorithms.*`` free functions.
+
+    mode:  "sync" (BSP/Jacobi baseline) | "async" (the paper's self-timed
+           cluster-dataflow engine) | "distributed" (shard_map halo-
+           exchange engine over the 'graph' mesh axis).
+    impl:  "ref" (XLA-fused jnp) | "pallas" (Mosaic kernel; interpret
+           mode off-TPU).  The distributed engine always uses "ref"
+           (Pallas calls cannot be SPMD-partitioned across host meshes).
+    """
+
+    mode: str = "async"
+    impl: str = "ref"
+    damping: float = 0.85
+    tol: float = 1e-6
+    max_sweeps: int = 10_000
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}: {self.mode!r}")
+        if self.impl not in IMPLS:
+            raise ValueError(f"impl must be one of {IMPLS}: {self.impl!r}")
+
+    def but(self, **kw) -> "ExecutionPolicy":
+        """Copy with overrides (policy objects are frozen)."""
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Everything that determines a ``Prepared`` image for one graph."""
+
+    semiring: str
+    variant: str          # base | unit | undirected — graph transform
+    pull: bool
+    normalize: Optional[str]
+    b: int
+    num_clusters: Optional[int]
+    clustered: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One query against a session: algorithm + sources + policy."""
+
+    algo: str                                   # sssp|bfs|pagerank|cc|
+                                                # reachability|minitri|dfs
+    sources: Tuple[int, ...] = ()
+    batched: bool = False                       # sources is a query axis
+    policy: Optional[ExecutionPolicy] = None    # None → session default
+    params: Tuple[Tuple[str, float], ...] = ()  # policy-field overrides,
+                                                # applied over `policy`
+
+
+@dataclasses.dataclass
+class Result:
+    """Uniform query result.
+
+    ``values`` is per-vertex output in ORIGINAL vertex ids — shape (n,)
+    for single queries, (Q, n) for batched multi-source queries.  The
+    leading four fields match the old ``algorithms.AlgoResult`` layout,
+    which is kept as an alias.
+    """
+
+    values: np.ndarray
+    stats: RunStats
+    prepared: Optional[Prepared]
+    extra: dict
+    policy: Optional[ExecutionPolicy] = None
+    graph: Optional[Graph] = None
+
+    def platform_models(self, sync_stats: Optional[RunStats] = None
+                        ) -> dict:
+        """Analytical NALE/CPU/GPU models (core/power.py) for this run.
+
+        The GPU model needs bulk-synchronous sweep counts; it is included
+        when this result is already sync or when ``sync_stats`` is given.
+        """
+        from . import power as PW
+        if self.prepared is None:
+            raise ValueError(
+                f"{self.extra.get('algo', 'this')} result has no BSR "
+                "image; platform models need a prepared plan")
+        rep = {"nale": PW.model_nale(self.prepared, self.stats),
+               "cpu": PW.model_cpu(self.prepared, self.stats)}
+        ss = sync_stats or (self.stats if self.stats.mode == "sync"
+                            else None)
+        if ss is not None and self.graph is not None:
+            k_pad = max(float(np.diff(self.graph.indptr).max()), 1.0)
+            rep["gpu"] = PW.model_gpu(self.prepared, ss, k_max_pad=k_pad,
+                                      avg_degree=self.graph.avg_degree)
+        return rep
+
+
+# back-compat defaults matching the old free functions
+_ALGO_POLICY = {
+    "pagerank": dict(tol=1e-8, max_sweeps=500),
+    "sssp": dict(max_sweeps=100_000),
+    "bfs": dict(max_sweeps=100_000),
+    "cc": dict(max_sweeps=100_000),
+    "reachability": dict(max_sweeps=100_000, mode="sync"),
+}
+
+
+class GraphProcessor:
+    """Prepare-once / query-many session over one graph.
+
+    Holds a plan cache of ``Prepared`` images keyed by ``PlanKey`` so
+    repeated and cross-algorithm queries share the compile-time pipeline
+    (clustering, permutation, BSR build, device upload), plus derived
+    graph variants (unit-weight, undirected) built at most once.
+    """
+
+    def __init__(self, g: Graph, b: int = 32,
+                 num_clusters: Optional[int] = None, clustered: bool = True,
+                 seed: int = 0, policy: Optional[ExecutionPolicy] = None):
+        self.g = g
+        self.b = b
+        self.num_clusters = num_clusters
+        self.clustered = clustered
+        self.seed = seed
+        self.policy = policy or ExecutionPolicy()
+        self._plans: Dict[PlanKey, Prepared] = {}
+        self._variants: Dict[str, Graph] = {"base": g}
+        self._prepare_calls = 0
+
+    # -- compile-time pipeline (cached) ---------------------------------
+
+    def _variant(self, name: str) -> Graph:
+        if name not in self._variants:
+            g = self.g
+            if name == "unit":
+                self._variants[name] = Graph(
+                    n=g.n, indptr=g.indptr, indices=g.indices,
+                    weights=np.ones(g.nnz, dtype=np.float32))
+            elif name == "undirected":
+                self._variants[name] = g.to_undirected()
+            else:
+                raise ValueError(f"unknown graph variant {name!r}")
+        return self._variants[name]
+
+    def prepare(self, semiring: str, variant: str = "base",
+                pull: bool = True, normalize: Optional[str] = None
+                ) -> Prepared:
+        """Fetch (or build and cache) the Prepared image for a plan."""
+        key = PlanKey(semiring, variant, pull, normalize, self.b,
+                      self.num_clusters, self.clustered)
+        p = self._plans.get(key)
+        if p is None:
+            self._prepare_calls += 1
+            p = eng.prepare(self._variant(variant), semiring, b=self.b,
+                            num_clusters=self.num_clusters, pull=pull,
+                            clustered=self.clustered, normalize=normalize,
+                            seed=self.seed)
+            self._plans[key] = p
+        return p
+
+    def cache_info(self) -> dict:
+        return {"plans": len(self._plans),
+                "prepare_calls": self._prepare_calls,
+                "keys": list(self._plans)}
+
+    # -- unified run entry point ----------------------------------------
+
+    def run(self, spec: QuerySpec) -> Result:
+        """Execute one QuerySpec.  All algorithm methods route here."""
+        if spec.algo in ("sssp", "bfs", "reachability", "dfs") \
+                and not spec.sources:
+            raise ValueError(
+                f"{spec.algo} requires at least one source vertex")
+        pol = spec.policy or self.policy.but(
+            **_ALGO_POLICY.get(spec.algo, {}))
+        if spec.params:
+            pol = pol.but(**dict(spec.params))
+        if spec.algo == "minitri":
+            return self._minitri()
+        if spec.algo == "dfs":
+            return self._dfs(spec.sources[0])
+        p, x0f, pad, apply_kind, post = self._relaxation_setup(spec)
+        if spec.batched:
+            return self._run_batched(spec, pol, p, x0f, pad, apply_kind,
+                                     post)
+        src = spec.sources[0] if spec.sources else None
+        x0 = p.to_blocks(x0f(src), pad)
+        x, stats, extra = self._dispatch(pol, p, x0, apply_kind, src)
+        values = post(p.from_blocks(x))
+        extra = dict(extra, algo=spec.algo,
+                     **({"src": src} if src is not None else {}))
+        return Result(values, stats, p, extra, policy=pol, graph=self.g)
+
+    # -- per-algorithm plan + frontier-init descriptors ------------------
+
+    def _relaxation_setup(self, spec: QuerySpec):
+        """Returns (Prepared, x0_builder(src), pad, apply_kind, post)."""
+        algo = spec.algo
+        n = self.g.n
+        if algo == "pagerank":
+            p = self.prepare("plus_times", normalize="out_stochastic")
+
+            def x0f(_):
+                return np.full(n, 1.0 / n, dtype=np.float32)
+
+            def post(v):
+                return v / max(v.sum(), 1e-30)  # dangling-drop: L1 renorm
+
+            return p, x0f, 0.0, "pagerank", post
+        if algo in ("sssp", "bfs"):
+            p = self.prepare("min_plus",
+                             variant="base" if algo == "sssp" else "unit")
+
+            def x0f(src):
+                x = np.full(n, np.inf, dtype=np.float32)
+                x[src] = 0.0
+                return x
+
+            return p, x0f, np.inf, "relax", lambda v: v
+        if algo == "cc":
+            p = self.prepare("min_select", variant="undirected")
+
+            def x0f(_):
+                return p.perm.astype(np.float32)
+
+            return p, x0f, np.inf, "relax", lambda v: v
+        if algo == "reachability":
+            p = self.prepare("max_min", variant="unit")
+
+            def x0f(src):
+                x = np.zeros(n, dtype=np.float32)
+                x[src] = 1.0
+                return x
+
+            return p, x0f, 0.0, "relax", lambda v: v
+        raise ValueError(f"unknown algorithm {spec.algo!r}")
+
+    def _frontier(self, p: Prepared, src: Optional[int]) -> jnp.ndarray:
+        """Initial changed-set for the async engine: just the source's
+        row-block when there is a point source, else everything."""
+        if src is None:
+            return jnp.ones(p.r_pad, dtype=bool)
+        ch = np.zeros(p.r_pad, dtype=bool)
+        ch[int(p.perm[src]) // p.b] = True
+        return jnp.asarray(ch)
+
+    # -- engine dispatch -------------------------------------------------
+
+    def _dispatch(self, pol: ExecutionPolicy, p: Prepared, x0,
+                  apply_kind: str, src: Optional[int]):
+        kw = dict(apply_kind=apply_kind, damping=pol.damping, tol=pol.tol,
+                  max_sweeps=pol.max_sweeps)
+        if pol.mode == "sync":
+            x, stats = eng.run_sync(p, x0, impl=pol.impl, **kw)
+            return x, stats, {}
+        if pol.mode == "async":
+            x, stats = eng.run_async(p, x0, impl=pol.impl,
+                                     changed0=self._frontier(p, src), **kw)
+            return x, stats, {}
+        # distributed: shard_map engine (sync semantics, ref kernels)
+        from . import placement
+        x, dist = placement.distributed_sync_run(p, x0, **kw)
+        stats = eng.bsp_stats(p, dist.sweeps, dist.converged,
+                              "distributed")
+        return x, stats, {"dist": dist}
+
+    def _run_batched(self, spec: QuerySpec, pol: ExecutionPolicy,
+                     p: Prepared, x0f, pad, apply_kind, post) -> Result:
+        sources = list(spec.sources)
+        if not sources:
+            raise ValueError("batched query needs at least one source")
+        x0 = jnp.stack([p.to_blocks(x0f(s), pad) for s in sources])
+        kw = dict(apply_kind=apply_kind, damping=pol.damping, tol=pol.tol,
+                  max_sweeps=pol.max_sweeps, impl=pol.impl)
+        if pol.mode == "async":
+            ch0 = jnp.stack([self._frontier(p, s) for s in sources])
+            x, stats = eng.run_async_batched(p, x0, changed0=ch0, **kw)
+        elif pol.mode == "sync":
+            x, stats = eng.run_sync_batched(p, x0, **kw)
+        else:
+            raise NotImplementedError(
+                "batched distributed queries: run one QuerySpec per "
+                "source, or use mode='sync'/'async'")
+        values = np.stack([post(p.from_blocks(x[q]))
+                           for q in range(len(sources))])
+        extra = {"algo": spec.algo, "sources": sources}
+        return Result(values, stats, p, extra, policy=pol, graph=self.g)
+
+    # -- the paper's six algorithms (+ reachability) ---------------------
+
+    def _spec(self, algo: str, sources, policy, **params) -> QuerySpec:
+        batched = sources is not None and not np.isscalar(sources)
+        srcs = (tuple(int(s) for s in sources) if batched
+                else ((int(sources),) if sources is not None else ()))
+        params = {k: v for k, v in params.items() if v is not None}
+        if params:
+            base = policy or self.policy.but(**_ALGO_POLICY.get(algo, {}))
+            policy = base.but(**params)
+        return QuerySpec(algo=algo, sources=srcs, batched=batched,
+                         policy=policy)
+
+    def pagerank(self, damping: Optional[float] = None,
+                 tol: Optional[float] = None,
+                 max_sweeps: Optional[int] = None,
+                 policy: Optional[ExecutionPolicy] = None) -> Result:
+        """Convergence kwargs override the (given or session) policy;
+        defaults are damping=0.85, tol=1e-8, max_sweeps=500."""
+        return self.run(self._spec("pagerank", None, policy,
+                                   damping=damping, tol=tol,
+                                   max_sweeps=max_sweeps))
+
+    def sssp(self, sources: Union[int, Sequence[int]],
+             policy: Optional[ExecutionPolicy] = None) -> Result:
+        """Single-source (int) or batched multi-source (sequence)."""
+        return self.run(self._spec("sssp", sources, policy))
+
+    def bfs(self, sources: Union[int, Sequence[int]],
+            policy: Optional[ExecutionPolicy] = None) -> Result:
+        res = self.run(self._spec("bfs", sources, policy))
+        res.extra["levels"] = res.values
+        return res
+
+    def connected_components(
+            self, policy: Optional[ExecutionPolicy] = None) -> Result:
+        return self.run(self._spec("cc", None, policy))
+
+    def reachability(self, src: int,
+                     policy: Optional[ExecutionPolicy] = None) -> Result:
+        return self.run(self._spec("reachability", src, policy))
+
+    def minitri(self, policy: Optional[ExecutionPolicy] = None,
+                chunk: int = 65536) -> Result:
+        del policy  # one-shot data-parallel: engine policy does not apply
+        return self._minitri(chunk)
+
+    def dfs(self, src: int,
+            policy: Optional[ExecutionPolicy] = None) -> Result:
+        return self.run(QuerySpec(algo="dfs", sources=(int(src),),
+                                  policy=policy))
+
+    # -- MiniTri: one-shot data-parallel intersection workload -----------
+
+    def _minitri(self, chunk: int = 65536) -> Result:
+        und = self._variant("undirected")
+        deg = und.out_degrees()
+        src = np.repeat(np.arange(und.n, dtype=np.int64),
+                        np.diff(und.indptr))
+        dst = und.indices.astype(np.int64)
+        # orient low→high (degree, id): DAG with small max out-degree
+        key_s = deg[src] * (und.n + 1) + src
+        key_d = deg[dst] * (und.n + 1) + dst
+        keep = key_s < key_d
+        s2, d2 = src[keep], dst[keep]
+        g_plus = Graph.from_edges(und.n, s2.astype(np.int32),
+                                  d2.astype(np.int32),
+                                  np.ones(len(s2), dtype=np.float32))
+        ell = to_ell_fast(g_plus)
+        rows = np.vstack([ell.cols, np.full((1, ell.k_max), und.n,
+                                            dtype=np.int32)])
+        eu = np.repeat(np.arange(und.n, dtype=np.int32),
+                       np.diff(g_plus.indptr))
+        ev = g_plus.indices.astype(np.int32)
+        rows_j = jnp.asarray(rows)
+        total = 0
+        for i in range(0, len(eu), chunk):
+            total += int(_tri_count(rows_j, jnp.asarray(eu[i:i + chunk]),
+                                    jnp.asarray(ev[i:i + chunk]),
+                                    jnp.int32(und.n)))
+        e_plus = len(eu)
+        # one-shot data-parallel workload: intersections distribute evenly
+        # over the NALE array (no dependency chain), so the critical path
+        # is total work / array width, not the serial stream
+        nales = 256.0
+        stats = RunStats(
+            sweeps=1, converged=True,
+            tile_work=float(e_plus * ell.k_max),
+            edge_work=float(e_plus * max(ell.k_max, 1)),
+            crit_tiles=float(e_plus * ell.k_max) / nales,
+            active_group_sweeps=nales, halo_tiles=0.0, total_groups=1,
+            mode="oneshot")
+        return Result(np.array([total]), stats, None,
+                      {"algo": "minitri", "triangles": total,
+                       "oriented_edges": e_plus, "k_max": ell.k_max},
+                      policy=None, graph=self.g)
+
+    # -- DFS: sequential stack machine (worst-case-serial) ---------------
+
+    def _dfs(self, src: int) -> Result:
+        g = self.g
+        ell = to_ell_fast(g)
+        n, k = g.n, ell.k_max
+        cols = jnp.asarray(ell.cols)  # pad = n
+
+        cap = g.nnz + n + 2
+
+        @jax.jit
+        def run():
+            stack = jnp.zeros(cap, dtype=jnp.int32).at[0].set(src)
+            pstack = jnp.full(cap, -1, dtype=jnp.int32)
+            visited = jnp.zeros(n + 1, dtype=bool).at[n].set(True)
+            order = jnp.full(n, -1, dtype=jnp.int32)
+            parent = jnp.full(n, -1, dtype=jnp.int32)
+
+            def cond(st):
+                sp, *_ = st
+                return sp > 0
+
+            def body(st):
+                sp, stack, pstack, visited, order, parent, cnt = st
+                u = stack[sp - 1]
+                pu = pstack[sp - 1]
+                sp = sp - 1
+                fresh = ~visited[u]
+
+                def visit(args):
+                    sp, stack, pstack, visited, order, parent, cnt = args
+                    visited = visited.at[u].set(True)
+                    order = order.at[cnt].set(u)
+                    parent = parent.at[u].set(pu)
+
+                    # push neighbours in reverse so lowest pops first
+                    def push(i, a):
+                        sp, stack, pstack = a
+                        v = cols[u, k - 1 - i]
+                        ok = ~visited[v]
+                        stack = stack.at[sp].set(
+                            jnp.where(ok, v, stack[sp]))
+                        pstack = pstack.at[sp].set(
+                            jnp.where(ok, u, pstack[sp]))
+                        return sp + ok.astype(jnp.int32), stack, pstack
+
+                    sp, stack, pstack = jax.lax.fori_loop(
+                        0, k, push, (sp, stack, pstack))
+                    return (sp, stack, pstack, visited, order, parent,
+                            cnt + 1)
+
+                return jax.lax.cond(
+                    fresh, visit, lambda a: a,
+                    (sp, stack, pstack, visited, order, parent, cnt))
+
+            st = (jnp.int32(1), stack, pstack, visited, order, parent,
+                  jnp.int32(0))
+            sp, stack, pstack, visited, order, parent, cnt = \
+                jax.lax.while_loop(cond, body, st)
+            return order, parent, cnt
+
+        order, parent, cnt = run()
+        stats = RunStats(
+            sweeps=int(cnt), converged=True,
+            tile_work=float(int(cnt) * k), edge_work=float(g.nnz),
+            crit_tiles=float(int(cnt) * k),
+            active_group_sweeps=float(int(cnt)),
+            halo_tiles=0.0, total_groups=1, mode="sequential")
+        return Result(np.asarray(order), stats, None,
+                      {"algo": "dfs", "src": src,
+                       "parent": np.asarray(parent),
+                       "visited_count": int(cnt)},
+                      policy=None, graph=self.g)
+
+
+@jax.jit
+def _tri_count(rows: jnp.ndarray, eu: jnp.ndarray, ev: jnp.ndarray,
+               sentinel: jnp.int32) -> jnp.ndarray:
+    """rows: (n+1, k) sorted neighbour ids padded with `sentinel`; (eu, ev)
+    oriented edges.  Batched sorted-intersection via searchsorted."""
+
+    def one(u, v):
+        a, bb = rows[u], rows[v]
+        pos = jnp.searchsorted(bb, a)
+        pos = jnp.clip(pos, 0, bb.shape[0] - 1)
+        hit = (bb[pos] == a) & (a != sentinel)
+        return jnp.sum(hit)
+
+    return jnp.sum(jax.vmap(one)(eu, ev))

@@ -189,6 +189,23 @@ class RunStats:
     mode: str
 
 
+def bsp_stats(p: Prepared, sweeps: int, converged: bool, mode: str,
+              work_sweeps: Optional[int] = None) -> RunStats:
+    """Work counters for bulk-synchronous execution: every sweep touches
+    every tile.  ``work_sweeps`` (default ``sweeps``) lets batched runs
+    charge total work across the query axis while ``sweeps`` (and the
+    critical path) reflect the straggler query."""
+    w = sweeps if work_sweeps is None else work_sweeps
+    return RunStats(
+        sweeps=sweeps, converged=converged,
+        tile_work=p.tiles_total * w,
+        edge_work=p.edges_total * w,
+        crit_tiles=float(np.max(np.asarray(p.group_tiles))) * sweeps,
+        active_group_sweeps=float(p.s * w),
+        halo_tiles=float(np.asarray(p.group_ext_tiles).sum()) * w,
+        total_groups=p.s, mode=mode)
+
+
 # ---------------------------------------------------------------------------
 # synchronous (BSP / Jacobi) engine
 # ---------------------------------------------------------------------------
@@ -224,16 +241,7 @@ def run_sync(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
     i, x, done = _sync_loop(p.vals, p.cols, p.nnz, p.valid, p.dangling, x0,
                             jnp.float32(damping), jnp.float32(tol), inv_n,
                             p.semiring, apply_kind, max_sweeps, impl)
-    sweeps = int(i)
-    stats = RunStats(
-        sweeps=sweeps, converged=bool(done),
-        tile_work=p.tiles_total * sweeps,
-        edge_work=p.edges_total * sweeps,
-        crit_tiles=float(np.max(np.asarray(p.group_tiles))) * sweeps,
-        active_group_sweeps=float(p.s * sweeps),
-        halo_tiles=float(np.asarray(p.group_ext_tiles).sum()) * sweeps,
-        total_groups=p.s, mode="sync")
-    return x, stats
+    return x, bsp_stats(p, int(i), bool(done), "sync")
 
 
 # ---------------------------------------------------------------------------
@@ -242,10 +250,10 @@ def run_sync(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "semiring_name", "apply_kind", "max_sweeps", "gb", "s"))
+    "semiring_name", "apply_kind", "max_sweeps", "gb", "s", "impl"))
 def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
                 group_ext, x0, changed0, damping, tol, inv_n,
-                semiring_name, apply_kind, max_sweeps, gb, s):
+                semiring_name, apply_kind, max_sweeps, gb, s, impl):
     ring = sr.get(semiring_name)
     k = cols.shape[1]
     lane = jnp.arange(k)[None, :]
@@ -272,7 +280,7 @@ def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
         def do(args):
             x, ch_next = args
             y = ops.bsr_spmv(vals_g, cols_g, nnz_g, x,
-                             semiring=semiring_name, impl="ref")
+                             semiring=semiring_name, impl=impl)
             xg = jax.lax.dynamic_slice_in_dim(x, row0, gb, 0)
             vg = jax.lax.dynamic_slice_in_dim(valid, row0, gb, 0)
             x_new, imp = _apply(apply_kind, ring, y, xg, vg, damping,
@@ -324,7 +332,7 @@ def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
 def run_async(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
               damping: float = 0.85, tol: float = 1e-6,
               max_sweeps: int = 10_000,
-              changed0: Optional[jnp.ndarray] = None
+              changed0: Optional[jnp.ndarray] = None, impl: str = "ref"
               ) -> Tuple[jnp.ndarray, RunStats]:
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     if changed0 is None:
@@ -333,11 +341,71 @@ def run_async(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
         p.vals, p.cols, p.nnz, p.valid, p.dangling, p.group_tiles,
         p.group_edges, p.group_ext_tiles, x0, changed0,
         jnp.float32(damping), jnp.float32(tol), inv_n, p.semiring,
-        apply_kind, max_sweeps, p.gb, p.s)
+        apply_kind, max_sweeps, p.gb, p.s, impl)
     stats = RunStats(
         sweeps=int(i), converged=bool(done),
         tile_work=float(c["tile_work"]), edge_work=float(c["edge_work"]),
         crit_tiles=float(c["crit"]),
         active_group_sweeps=float(c["active"]),
         halo_tiles=float(c["halo"]), total_groups=p.s, mode="async")
+    return x, stats
+
+
+# ---------------------------------------------------------------------------
+# batched multi-source runners — vmap over the frontier-init axis
+# ---------------------------------------------------------------------------
+#
+# One Prepared, one compile: the query axis (e.g. SSSP sources) is a vmap
+# axis over x0, so Q queries share the device-resident BSR image and the
+# traced program.  JAX's while_loop batching rule masks updates per query,
+# so each query stops relaxing once it converges; reported sweeps is the
+# straggler's (the batch retires together, like a wavefront of independent
+# frontiers through the same NALE array).
+
+
+def run_sync_batched(p: Prepared, x0: jnp.ndarray,
+                     apply_kind: str = "relax", damping: float = 0.85,
+                     tol: float = 1e-6, max_sweeps: int = 10_000,
+                     impl: str = "ref") -> Tuple[jnp.ndarray, RunStats]:
+    """x0: (Q, r_pad, B) — returns ((Q, r_pad, B), aggregate RunStats)."""
+    inv_n = jnp.float32(1.0 / max(p.n, 1))
+
+    def one(x0q):
+        return _sync_loop(p.vals, p.cols, p.nnz, p.valid, p.dangling, x0q,
+                          jnp.float32(damping), jnp.float32(tol), inv_n,
+                          p.semiring, apply_kind, max_sweeps, impl)
+
+    i, x, done = jax.vmap(one)(x0)
+    sweeps = np.asarray(i)
+    return x, bsp_stats(p, int(sweeps.max(initial=0)), bool(np.all(done)),
+                        "sync", work_sweeps=int(sweeps.sum()))
+
+
+def run_async_batched(p: Prepared, x0: jnp.ndarray,
+                      apply_kind: str = "relax", damping: float = 0.85,
+                      tol: float = 1e-6, max_sweeps: int = 10_000,
+                      changed0: Optional[jnp.ndarray] = None,
+                      impl: str = "ref") -> Tuple[jnp.ndarray, RunStats]:
+    """x0: (Q, r_pad, B); changed0: optional (Q, r_pad) per-query frontier."""
+    inv_n = jnp.float32(1.0 / max(p.n, 1))
+    if changed0 is None:
+        changed0 = jnp.ones((x0.shape[0], p.r_pad), dtype=bool)
+
+    def one(x0q, ch0q):
+        return _async_loop(
+            p.vals, p.cols, p.nnz, p.valid, p.dangling, p.group_tiles,
+            p.group_edges, p.group_ext_tiles, x0q, ch0q,
+            jnp.float32(damping), jnp.float32(tol), inv_n, p.semiring,
+            apply_kind, max_sweeps, p.gb, p.s, impl)
+
+    i, x, done, c = jax.vmap(one)(x0, changed0)
+    sweeps = np.asarray(i)
+    stats = RunStats(
+        sweeps=int(sweeps.max(initial=0)), converged=bool(np.all(done)),
+        tile_work=float(np.asarray(c["tile_work"]).sum()),
+        edge_work=float(np.asarray(c["edge_work"]).sum()),
+        crit_tiles=float(np.asarray(c["crit"]).max(initial=0.0)),
+        active_group_sweeps=float(np.asarray(c["active"]).sum()),
+        halo_tiles=float(np.asarray(c["halo"]).sum()),
+        total_groups=p.s, mode="async")
     return x, stats

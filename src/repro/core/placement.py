@@ -22,6 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax.shard_map landed in 0.5.x; this container ships 0.4.x
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from . import semiring as sr
 from .engine import Prepared, RunStats, _apply
 from ..kernels import ref as kref
@@ -71,10 +76,10 @@ def distributed_sync_run(
     tol = jnp.float32(tol)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P("graph"), P("graph"), P("graph"), P("graph"),
                   P("graph")),
-        out_specs=(P("graph"), P(), P()))
+        out_specs=(P("graph"), P(), P()), check_rep=False)
     def run(vals_l, cols_l, nnz_l, valid_l, x_l):
         def cond(st):
             i, x_loc, done = st
@@ -112,8 +117,9 @@ def lower_distributed(p: Prepared, mesh: Mesh, apply_kind: str = "relax"):
 
     def one_sweep(vals, cols, nnz, valid, x):
         @functools.partial(
-            jax.shard_map, mesh=mesh,
-            in_specs=(P("graph"),) * 5, out_specs=P("graph"))
+            _shard_map, mesh=mesh,
+            in_specs=(P("graph"),) * 5, out_specs=P("graph"),
+            check_rep=False)
         def sweep(vals_l, cols_l, nnz_l, valid_l, x_l):
             xg = jax.lax.all_gather(x_l, "graph", tiled=True)
             y = kref.bsr_spmv_ref(vals_l, cols_l, xg, p.semiring)

@@ -8,14 +8,21 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod (TPU v5e pod slice); 2 pods = 512 chips
     with a leading 'pod' axis for cross-pod data parallelism."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_factored_mesh(*, multi_pod: bool = False, factors=(8, 2)):
@@ -27,9 +34,7 @@ def make_factored_mesh(*, multi_pod: bool = False, factors=(8, 2)):
     shape = (2, 16) + factors if multi_pod else (16,) + factors
     axes = ("pod", "data", "model", "model2") if multi_pod else \
         ("data", "model", "model2")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh():
@@ -40,6 +45,4 @@ def make_host_mesh():
         if n % cand == 0 and n >= cand:
             d = cand
             break
-    return jax.make_mesh(
-        (n // d, d), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mesh((n // d, d), ("data", "model"))

