@@ -13,4 +13,15 @@ python -m pytest -x -q
 echo "== quickstart smoke (CPU) =="
 python examples/quickstart.py
 
+echo "== bench trend vs committed BENCH_graph.json =="
+# re-run the modeled benchmarks at the committed snapshot's scale and
+# gate on >25% modeled-speedup regression (also reports the plan-store
+# hit rate for the run)
+SCALE=$(python -c "import json; \
+    print(json.load(open('BENCH_graph.json'))['meta']['scale'])")
+python -m benchmarks.run --scale "$SCALE" --json BENCH_ci.json \
+    --skip kernel lm
+python -m benchmarks.trend_check BENCH_graph.json BENCH_ci.json \
+    --threshold 0.25
+
 echo "CI OK"

@@ -77,6 +77,15 @@ def main() -> None:
         print(f"async work reduction (measured): geomean "
               f"{np.exp(np.log(wr).mean()):.2f}x over bulk-synchronous")
 
+    # --- serving-layer accounting --------------------------------------
+    store = common.service().store.stats()
+    out["plan_store"] = store
+    print(f"plan store: {store['plans']} plans "
+          f"({store['bytes'] / 1e6:.2f} MB), hit rate "
+          f"{store['hit_rate']:.1%} "
+          f"({store['mem_hits']} mem + {store['disk_hits']} disk hits, "
+          f"{store['misses']} builds)")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=1, default=float)

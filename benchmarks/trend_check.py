@@ -1,0 +1,90 @@
+"""Bench-trend gate: diff a fresh ``BENCH_graph.json`` against the
+committed snapshot and fail CI on a modeled-speedup regression.
+
+The modeled NALE-vs-CPU speedups (fig5) are deterministic for a given
+scale/seed, so any drift is a real change in engine work counters or the
+compile pipeline — exactly what a perf-regression gate should catch.
+
+  python -m benchmarks.trend_check BASELINE FRESH [--threshold 0.25]
+
+Exits non-zero when the geomean modeled speedup over the (graph, algo)
+pairs present in both snapshots regresses by more than ``threshold``
+(default 25%).  Also reports per-entry drift and the fresh run's
+plan-store hit rate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def _fig5_speedups(snapshot: dict) -> dict:
+    return {(r["graph"], r["algo"]): float(r["speedup_cpu"])
+            for r in snapshot.get("fig5", [])
+            if r.get("speedup_cpu") is not None}
+
+
+def compare(baseline: dict, fresh: dict, threshold: float) -> int:
+    base = _fig5_speedups(baseline)
+    new = _fig5_speedups(fresh)
+    if not base:
+        # nothing to gate against (e.g. baseline was taken with fig5
+        # skipped) — the only case where passing vacuously is right
+        print("trend: baseline snapshot has no fig5 entries — "
+              "skipping gate")
+        return 0
+    missing = sorted(set(base) - set(new))
+    if missing:
+        # a baseline entry vanishing from the fresh run is itself a
+        # regression (broken emission, renamed keys, dropped algo) —
+        # never let it silently shrink the comparison
+        print(f"trend: FAIL — {len(missing)} baseline entries missing "
+              f"from the fresh snapshot: {missing}")
+        return 1
+    shared = sorted(base)
+    ratios = []
+    for k in shared:
+        ratio = max(new[k], 1e-12) / max(base[k], 1e-12)
+        ratios.append(ratio)
+        flag = "  << regressed" if ratio < 1.0 - threshold else ""
+        print(f"trend: {k[0]:>4s}/{k[1]:<9s} speedup "
+              f"{base[k]:9.2f} -> {new[k]:9.2f}  ({ratio:6.3f}x){flag}")
+    geo = float(np.exp(np.log(ratios).mean()))
+    print(f"trend: geomean modeled-speedup ratio {geo:.3f}x over "
+          f"{len(shared)} entries (gate: >{1.0 - threshold:.2f})")
+    store = fresh.get("plan_store")
+    if store:
+        print(f"trend: plan-store hit rate {store['hit_rate']:.1%} "
+              f"({store['plans']} plans, {store['misses']} builds)")
+    if geo < 1.0 - threshold:
+        print(f"trend: FAIL — modeled speedup regressed "
+              f"{(1.0 - geo):.1%} (> {threshold:.0%} budget)")
+        return 1
+    print("trend: OK")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed snapshot (BENCH_graph.json)")
+    ap.add_argument("fresh", help="snapshot from this run")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated geomean speedup regression")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if baseline.get("meta", {}).get("scale") != \
+            fresh.get("meta", {}).get("scale"):
+        print("trend: WARNING — snapshots were taken at different scales; "
+              "ratios may not be meaningful")
+    return compare(baseline, fresh, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,9 +32,10 @@ def main():
                   f"{cpu.cycles:11.3g} {gpu.cycles:11.3g} "
                   f"{cpu.time_s/nale.time_s:6.1f}x "
                   f"{nale.perf_per_watt/gpu.perf_per_watt:13.1f}x")
-        info = common.processor(g).cache_info()
-        print(f"{gname:5s} session: {info['plans']} cached plans served "
-              f"all algorithms/modes above")
+    info = common.service().store.stats()
+    print(f"plan store: {info['plans']} cached plans, hit rate "
+          f"{info['hit_rate']:.1%} across all graphs/algorithms/modes "
+          f"above")
 
 
 if __name__ == "__main__":

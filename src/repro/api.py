@@ -1,4 +1,4 @@
-"""Public session API — ``repro.api``.
+"""Public session + serving API — ``repro.api``.
 
 Prepare-once / query-many graph processing (see ``core/api.py``):
 
@@ -8,11 +8,25 @@ Prepare-once / query-many graph processing (see ``core/api.py``):
     d = proc.sssp(sources=[0, 5, 9])          # batched, one compile
     fast = api.ExecutionPolicy(mode="async", impl="pallas")
     d2 = proc.sssp(0, policy=fast)
+
+Serving many graphs (see ``serve/graph.py``): a ``GraphService`` holds a
+named graph registry, a shared byte-bounded LRU plan store with an
+on-disk persistence tier (warm restarts skip the compile pipeline), and
+a ``submit``/``gather`` front door that coalesces same-plan
+single-source queries into batched runs:
+
+    svc = api.GraphService(cache_dir=".plan-cache")
+    svc.register("roads", g, b=16, num_clusters=64)
+    t = svc.submit("roads", api.QuerySpec(algo="sssp", sources=(0,)))
+    dist = svc.gather()[t].values
 """
 
 from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
                        QuerySpec, Result)
-from .core.engine import Prepared, RunStats  # noqa: F401
+from .core.engine import (Prepared, RunStats,  # noqa: F401
+                          deserialize_prepared, serialize_prepared)
+from .serve.graph import GraphService, PlanStore  # noqa: F401
 
-__all__ = ["ExecutionPolicy", "GraphProcessor", "PlanKey", "QuerySpec",
-           "Result", "Prepared", "RunStats"]
+__all__ = ["ExecutionPolicy", "GraphProcessor", "GraphService", "PlanKey",
+           "PlanStore", "QuerySpec", "Result", "Prepared", "RunStats",
+           "serialize_prepared", "deserialize_prepared"]

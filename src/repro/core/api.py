@@ -26,7 +26,7 @@ analytical NALE/CPU/GPU cycle & power models.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,12 @@ class ExecutionPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
-    """Everything that determines a ``Prepared`` image for one graph."""
+    """Everything that determines a ``Prepared`` image for one graph.
+
+    Paired with the graph's content :meth:`~repro.core.graph.Graph.
+    fingerprint`, a PlanKey is globally unique — that pair is the key of
+    the cross-process plan store (``serve.graph.PlanStore``).
+    """
 
     semiring: str
     variant: str          # base | unit | undirected — graph transform
@@ -81,19 +86,32 @@ class PlanKey:
     b: int
     num_clusters: Optional[int]
     clustered: bool
+    seed: int = 0         # clustering seed (part of plan identity)
 
 
 @dataclasses.dataclass(frozen=True)
 class QuerySpec:
-    """One query against a session: algorithm + sources + policy."""
+    """One query against a session: algorithm + sources + policy.
+
+    ``params`` are policy-field overrides applied over ``policy``; they
+    may be given as a plain dict (``{"max_sweeps": 1}``) or as the
+    historical tuple-of-tuples — dicts are normalized on construction so
+    the spec stays hashable either way.
+    """
 
     algo: str                                   # sssp|bfs|pagerank|cc|
                                                 # reachability|minitri|dfs
     sources: Tuple[int, ...] = ()
     batched: bool = False                       # sources is a query axis
     policy: Optional[ExecutionPolicy] = None    # None → session default
-    params: Tuple[Tuple[str, float], ...] = ()  # policy-field overrides,
-                                                # applied over `policy`
+    params: Union[Mapping[str, float],
+                  Tuple[Tuple[str, float], ...]] = ()
+
+    def __post_init__(self):
+        items = self.params.items() if isinstance(self.params, Mapping) \
+            else ((str(k), v) for k, v in self.params)
+        # sorted in both forms: equivalent specs must compare/hash equal
+        object.__setattr__(self, "params", tuple(sorted(items)))
 
 
 @dataclasses.dataclass
@@ -136,6 +154,29 @@ class Result:
         return rep
 
 
+ALGOS = ("sssp", "bfs", "pagerank", "cc", "reachability", "minitri",
+         "dfs")
+# algorithms that need at least one source vertex
+SOURCE_REQUIRED = ("sssp", "bfs", "reachability", "dfs")
+
+
+def validate_spec(spec: QuerySpec) -> None:
+    """Raise on specs that can never execute.  Shared by
+    ``GraphProcessor.run`` and the serving layer's ``submit`` (which
+    must reject bad requests before they can ride in a batch)."""
+    if spec.algo not in ALGOS:
+        raise ValueError(
+            f"unknown algorithm {spec.algo!r}; expected one of {ALGOS}")
+    if spec.algo in SOURCE_REQUIRED and not spec.sources:
+        raise ValueError(
+            f"{spec.algo} requires at least one source vertex")
+    if len(spec.sources) > 1 and not spec.batched:
+        raise ValueError(
+            f"{len(spec.sources)} sources with batched=False would "
+            "silently run only the first; set batched=True (or submit "
+            "one spec per source)")
+
+
 # back-compat defaults matching the old free functions
 _ALGO_POLICY = {
     "pagerank": dict(tol=1e-8, max_sweeps=500),
@@ -153,17 +194,27 @@ class GraphProcessor:
     repeated and cross-algorithm queries share the compile-time pipeline
     (clustering, permutation, BSR build, device upload), plus derived
     graph variants (unit-weight, undirected) built at most once.
+
+    When ``store`` (a ``serve.graph.PlanStore``) is injected, plans are
+    *borrowed* from it instead of owned: every ``prepare`` consults the
+    shared store under ``(graph_fingerprint, PlanKey)``, so plans are
+    shared across processors, across graphs registered in one
+    ``GraphService``, and — through the store's on-disk cache — across
+    process restarts.  Eviction then lives in exactly one place (the
+    store); the processor keeps no private copy.
     """
 
     def __init__(self, g: Graph, b: int = 32,
                  num_clusters: Optional[int] = None, clustered: bool = True,
-                 seed: int = 0, policy: Optional[ExecutionPolicy] = None):
+                 seed: int = 0, policy: Optional[ExecutionPolicy] = None,
+                 store=None):
         self.g = g
         self.b = b
         self.num_clusters = num_clusters
         self.clustered = clustered
         self.seed = seed
         self.policy = policy or ExecutionPolicy()
+        self.store = store
         self._plans: Dict[PlanKey, Prepared] = {}
         self._variants: Dict[str, Graph] = {"base": g}
         self._prepare_calls = 0
@@ -183,39 +234,67 @@ class GraphProcessor:
                 raise ValueError(f"unknown graph variant {name!r}")
         return self._variants[name]
 
+    def plan_key(self, semiring: str, variant: str = "base",
+                 pull: bool = True, normalize: Optional[str] = None
+                 ) -> PlanKey:
+        return PlanKey(semiring, variant, pull, normalize, self.b,
+                       self.num_clusters, self.clustered, self.seed)
+
     def prepare(self, semiring: str, variant: str = "base",
                 pull: bool = True, normalize: Optional[str] = None
                 ) -> Prepared:
-        """Fetch (or build and cache) the Prepared image for a plan."""
-        key = PlanKey(semiring, variant, pull, normalize, self.b,
-                      self.num_clusters, self.clustered)
+        """Fetch (or build and cache) the Prepared image for a plan.
+
+        With an injected store the lookup (and LRU/byte accounting) is
+        delegated; without one, plans live in a session-local dict.
+        """
+        key = self.plan_key(semiring, variant, pull, normalize)
+        if self.store is not None:
+            p = self.store.get(self.g.fingerprint(), key)
+            if p is None:
+                self._prepare_calls += 1
+                p = self._build(semiring, variant, pull, normalize)
+                self.store.put(self.g.fingerprint(), key, p)
+            return p
         p = self._plans.get(key)
         if p is None:
             self._prepare_calls += 1
-            p = eng.prepare(self._variant(variant), semiring, b=self.b,
-                            num_clusters=self.num_clusters, pull=pull,
-                            clustered=self.clustered, normalize=normalize,
-                            seed=self.seed)
+            p = self._build(semiring, variant, pull, normalize)
             self._plans[key] = p
         return p
 
+    def _build(self, semiring: str, variant: str, pull: bool,
+               normalize: Optional[str]) -> Prepared:
+        return eng.prepare(self._variant(variant), semiring, b=self.b,
+                           num_clusters=self.num_clusters, pull=pull,
+                           clustered=self.clustered, normalize=normalize,
+                           seed=self.seed)
+
     def cache_info(self) -> dict:
-        return {"plans": len(self._plans),
+        info = {"plans": len(self._plans),
                 "prepare_calls": self._prepare_calls,
                 "keys": list(self._plans)}
+        if self.store is not None:
+            info["store"] = self.store.stats()
+        return info
 
     # -- unified run entry point ----------------------------------------
 
-    def run(self, spec: QuerySpec) -> Result:
-        """Execute one QuerySpec.  All algorithm methods route here."""
-        if spec.algo in ("sssp", "bfs", "reachability", "dfs") \
-                and not spec.sources:
-            raise ValueError(
-                f"{spec.algo} requires at least one source vertex")
+    def resolve_policy(self, spec: QuerySpec) -> ExecutionPolicy:
+        """The effective policy for a spec: explicit policy (or session
+        default merged with per-algorithm defaults), then ``params``
+        overrides.  Exposed so the serving layer can group same-policy
+        requests for coalescing exactly as ``run`` would execute them."""
         pol = spec.policy or self.policy.but(
             **_ALGO_POLICY.get(spec.algo, {}))
         if spec.params:
             pol = pol.but(**dict(spec.params))
+        return pol
+
+    def run(self, spec: QuerySpec) -> Result:
+        """Execute one QuerySpec.  All algorithm methods route here."""
+        validate_spec(spec)
+        pol = self.resolve_policy(spec)
         if spec.algo == "minitri":
             return self._minitri()
         if spec.algo == "dfs":
@@ -310,18 +389,34 @@ class GraphProcessor:
         sources = list(spec.sources)
         if not sources:
             raise ValueError("batched query needs at least one source")
+        if pol.mode == "distributed":
+            # The shard_map engine has no batched (vmap) path — the query
+            # axis would need a second mesh dim.  Documented fallback:
+            # run each source through the distributed engine in turn and
+            # stack to (Q, n); `sweeps` is the straggler's, work counters
+            # are totals across the query axis.
+            xs, sweeps, conv = [], [], []
+            for s in sources:
+                x0q = p.to_blocks(x0f(s), pad)
+                xq, st, _ = self._dispatch(pol, p, x0q, apply_kind, s)
+                xs.append(xq)
+                sweeps.append(st.sweeps)
+                conv.append(st.converged)
+            stats = eng.bsp_stats(p, max(sweeps), all(conv),
+                                  "distributed", work_sweeps=sum(sweeps))
+            values = np.stack([post(p.from_blocks(xq)) for xq in xs])
+            extra = {"algo": spec.algo, "sources": sources,
+                     "batched_fallback": "per-source sequential"}
+            return Result(values, stats, p, extra, policy=pol,
+                          graph=self.g)
         x0 = jnp.stack([p.to_blocks(x0f(s), pad) for s in sources])
         kw = dict(apply_kind=apply_kind, damping=pol.damping, tol=pol.tol,
                   max_sweeps=pol.max_sweeps, impl=pol.impl)
         if pol.mode == "async":
             ch0 = jnp.stack([self._frontier(p, s) for s in sources])
             x, stats = eng.run_async_batched(p, x0, changed0=ch0, **kw)
-        elif pol.mode == "sync":
-            x, stats = eng.run_sync_batched(p, x0, **kw)
         else:
-            raise NotImplementedError(
-                "batched distributed queries: run one QuerySpec per "
-                "source, or use mode='sync'/'async'")
+            x, stats = eng.run_sync_batched(p, x0, **kw)
         values = np.stack([post(p.from_blocks(x[q]))
                            for q in range(len(sources))])
         extra = {"algo": spec.algo, "sources": sources}

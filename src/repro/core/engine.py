@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import io
+import json
 from typing import Optional, Tuple
 
 import jax
@@ -73,6 +75,137 @@ class Prepared:
         """(r_pad, B) block layout → (n,) values in OLD ids."""
         flat = np.asarray(xb).reshape(-1)
         return flat[self.perm]
+
+    @property
+    def nbytes(self) -> int:
+        """Footprint of the plan (device tile image + host metadata) —
+        the unit of the plan store's byte budget.  Metadata-only: jax
+        arrays report nbytes without a device-to-host transfer."""
+        dev = sum(int(a.nbytes) for a in (
+            self.vals, self.cols, self.nnz, self.valid, self.dangling,
+            self.group_tiles, self.group_edges, self.group_ext_tiles))
+        host = int(self.perm.nbytes) + int(self.inv_perm.nbytes) + \
+            int(self.clustering.assign.nbytes) + \
+            int(self.clustering.perm.nbytes)
+        return dev + host
+
+
+# ``Prepared`` as a pytree: device arrays are leaves, host metadata is the
+# (hashable, content-compared) treedef aux.  This is what makes a plan a
+# first-class JAX value — it can ride through jax.tree_util (serialization
+# walks the same split) and be passed whole into transformed functions.
+
+_PREPARED_DEVICE_FIELDS = (
+    "vals", "cols", "nnz", "valid", "dangling",
+    "group_tiles", "group_edges", "group_ext_tiles")
+_PREPARED_HOST_FIELDS = (
+    "n", "b", "r_pad", "k_max", "gb", "s", "semiring",
+    "perm", "inv_perm", "clustering", "tiles_total", "edges_total")
+
+
+class _HostMeta:
+    """Hashable wrapper for Prepared's host half (numpy arrays compare by
+    content; the hash folds in the permutation bytes)."""
+
+    __slots__ = ("fields", "_hash")
+
+    def __init__(self, fields: tuple):
+        self.fields = fields
+        d = dict(zip(_PREPARED_HOST_FIELDS, fields))
+        self._hash = hash((d["n"], d["b"], d["r_pad"], d["k_max"],
+                           d["gb"], d["s"], d["semiring"],
+                           d["perm"].tobytes()))
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        if not isinstance(other, _HostMeta):
+            return NotImplemented
+        for a, b in zip(self.fields, other.fields):
+            if isinstance(a, np.ndarray):
+                if not np.array_equal(a, b):
+                    return False
+            elif isinstance(a, Clustering):
+                if not (a.num_clusters == b.num_clusters
+                        and np.array_equal(a.perm, b.perm)
+                        and np.array_equal(a.schedule, b.schedule)):
+                    return False
+            elif a != b:
+                return False
+        return True
+
+
+def _prepared_flatten(p: Prepared):
+    children = tuple(getattr(p, f) for f in _PREPARED_DEVICE_FIELDS)
+    aux = _HostMeta(tuple(getattr(p, f) for f in _PREPARED_HOST_FIELDS))
+    return children, aux
+
+
+def _prepared_unflatten(aux: _HostMeta, children) -> Prepared:
+    kw = dict(zip(_PREPARED_DEVICE_FIELDS, children))
+    kw.update(zip(_PREPARED_HOST_FIELDS, aux.fields))
+    return Prepared(**kw)
+
+
+jax.tree_util.register_pytree_node(
+    Prepared, _prepared_flatten, _prepared_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Prepared (de)serialization — the persistent half of the plan store
+# ---------------------------------------------------------------------------
+#
+# A serialized plan is one .npz payload: the device tile image pulled back
+# to host, the clustering/permutation, and a JSON metadata record.  A warm
+# restart deserializes this instead of re-running the whole compile
+# pipeline (profile → cluster → analyze → place → BSR build).
+
+PREPARED_FORMAT_VERSION = 1
+
+
+def serialize_prepared(p: Prepared) -> bytes:
+    """Pack a ``Prepared`` into a self-describing bytes payload."""
+    c = p.clustering
+    meta = dict(
+        version=PREPARED_FORMAT_VERSION, n=p.n, b=p.b, r_pad=p.r_pad,
+        k_max=p.k_max, gb=p.gb, s=p.s, semiring=p.semiring,
+        tiles_total=p.tiles_total, edges_total=p.edges_total,
+        c_num_clusters=c.num_clusters, c_internal=c.internal_edges,
+        c_cut=c.cut_edges)
+    arrays = {f: np.asarray(getattr(p, f)) for f in _PREPARED_DEVICE_FIELDS}
+    arrays.update(perm=p.perm, inv_perm=p.inv_perm, c_assign=c.assign,
+                  c_perm=c.perm, c_sizes=c.sizes, c_schedule=c.schedule)
+    buf = io.BytesIO()
+    np.savez(buf, __meta__=np.frombuffer(
+        json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+    return buf.getvalue()
+
+
+def deserialize_prepared(data: bytes) -> Prepared:
+    """Rebuild a ``Prepared`` (device arrays re-uploaded) from a payload
+    produced by :func:`serialize_prepared`."""
+    with np.load(io.BytesIO(data), allow_pickle=False) as z:
+        meta = json.loads(z["__meta__"].tobytes().decode())
+        if meta["version"] != PREPARED_FORMAT_VERSION:
+            raise ValueError(
+                f"plan payload version {meta['version']} != "
+                f"{PREPARED_FORMAT_VERSION}; rebuild the plan")
+        arrays = {k: z[k] for k in z.files if k != "__meta__"}
+    clustering = Clustering(
+        num_clusters=int(meta["c_num_clusters"]),
+        assign=arrays["c_assign"], perm=arrays["c_perm"],
+        sizes=arrays["c_sizes"], schedule=arrays["c_schedule"],
+        internal_edges=int(meta["c_internal"]),
+        cut_edges=int(meta["c_cut"]))
+    return Prepared(
+        **{f: jnp.asarray(arrays[f]) for f in _PREPARED_DEVICE_FIELDS},
+        n=int(meta["n"]), b=int(meta["b"]), r_pad=int(meta["r_pad"]),
+        k_max=int(meta["k_max"]), gb=int(meta["gb"]), s=int(meta["s"]),
+        semiring=meta["semiring"], perm=arrays["perm"],
+        inv_perm=arrays["inv_perm"], clustering=clustering,
+        tiles_total=float(meta["tiles_total"]),
+        edges_total=float(meta["edges_total"]))
 
 
 def prepare(g: Graph, semiring_name: str, b: int = 32,

@@ -20,6 +20,7 @@ scale.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional, Tuple
 
 import numpy as np
@@ -87,6 +88,28 @@ class Graph:
         return Graph.from_edges(self.n, perm[src].astype(np.int32),
                                 perm[self.indices].astype(np.int32),
                                 self.weights, dedup=False)
+
+    def fingerprint(self) -> str:
+        """Stable content hash of the graph (topology + weights).
+
+        Used as the graph half of cross-process plan-store keys
+        (``serve.graph.PlanStore``): two Graph objects with identical
+        structure hash identically, so a restarted service can find the
+        plans a previous process persisted.  Graphs are treated as
+        immutable after construction; the digest is cached.
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(np.int64(self.n).tobytes())
+            h.update(np.ascontiguousarray(self.indptr,
+                                          dtype=np.int64).tobytes())
+            h.update(np.ascontiguousarray(self.indices,
+                                          dtype=np.int32).tobytes())
+            h.update(np.ascontiguousarray(self.weights,
+                                          dtype=np.float32).tobytes())
+            fp = self.__dict__["_fingerprint"] = h.hexdigest()
+        return fp
 
 
 # ---------------------------------------------------------------------------

@@ -1,1 +1,12 @@
-from .engine import ServeLoop, generate  # noqa: F401
+from .graph import GraphService, PlanStore  # noqa: F401
+
+__all__ = ["ServeLoop", "generate", "GraphService", "PlanStore"]
+
+
+def __getattr__(name):
+    # the LM serving loop pulls in the whole model/config stack; load it
+    # lazily so graph-only users of repro.api don't pay for it
+    if name in ("ServeLoop", "generate"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

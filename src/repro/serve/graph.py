@@ -1,0 +1,399 @@
+"""GraphService — the multi-graph serving gateway.
+
+The paper's amortization argument, taken to system scale: compile-time
+work (profile → cluster → place → BSR build, Fig. 4) is done once and
+*kept*, so the run-time engines serve queries at run-time speed.  PR 1's
+``GraphProcessor`` holds that split per process; this module holds it per
+*fleet*:
+
+  * ``PlanStore`` — a bounded LRU of ``Prepared`` plan images keyed by
+    ``(graph_fingerprint, PlanKey)`` with byte-size accounting, shared by
+    every graph registered in a service, and backed by a persistent
+    on-disk cache so a restarted process warm-loads plans instead of
+    re-running the compile pipeline (PIUMA / GraphScale's load-once /
+    query-many shape surviving the process boundary).
+
+  * ``GraphService`` — the front door: a named graph registry
+    (``register / get / evict``), direct ``run``, and a ``submit(...) →
+    ticket`` / ``gather()`` queue that coalesces same-plan single-source
+    SSSP/BFS requests into one batched vmap run (the slot/wave pattern of
+    ``serve.engine.ServeLoop``, with the query axis playing the slot
+    axis).
+
+    svc = GraphService(cache_dir="~/.cache/repro-plans",
+                       max_plan_bytes=256 << 20)
+    svc.register("roads", g, b=16, num_clusters=64)
+    t0 = svc.submit("roads", QuerySpec(algo="sssp", sources=(0,)))
+    t1 = svc.submit("roads", QuerySpec(algo="sssp", sources=(9,)))
+    out = svc.gather()        # one batched run served both tickets
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import os
+import threading
+import zipfile
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core import engine as eng
+from ..core.api import (ExecutionPolicy, GraphProcessor, PlanKey, QuerySpec,
+                        Result, validate_spec)
+from ..core.engine import Prepared
+from ..core.graph import Graph
+
+# algorithms whose single-source requests can share one batched vmap run
+COALESCIBLE = ("sssp", "bfs")
+
+
+def _plan_filename(fingerprint: str, key: PlanKey) -> str:
+    kd = hashlib.blake2b(repr(key).encode(), digest_size=12).hexdigest()
+    return f"{fingerprint}-{kd}.plan.npz"
+
+
+class PlanStore:
+    """Bounded LRU of ``Prepared`` images with a persistent disk tier.
+
+    Memory tier: an ordered map ``(fingerprint, PlanKey) → Prepared``
+    with byte-size accounting (``Prepared.nbytes``); inserting past
+    ``max_bytes`` evicts least-recently-used plans.  Disk tier (optional
+    ``cache_dir``): every built plan is serialized on ``put``; a memory
+    miss falls through to disk before reporting a miss, so evicted and
+    cross-process plans reload without re-running the compile pipeline.
+    """
+
+    def __init__(self, max_bytes: int = 256 << 20,
+                 cache_dir: Optional[str] = None):
+        self.max_bytes = int(max_bytes)
+        self.cache_dir = os.path.expanduser(cache_dir) if cache_dir \
+            else None
+        if self.cache_dir:
+            os.makedirs(self.cache_dir, exist_ok=True)
+        self._mem: "collections.OrderedDict[Tuple[str, PlanKey], " \
+            "Tuple[Prepared, int]]" = collections.OrderedDict()
+        self._bytes = 0
+        self._lock = threading.RLock()
+        self._stats = dict(mem_hits=0, disk_hits=0, misses=0, puts=0,
+                           evictions=0, disk_errors=0)
+
+    # -- lookup ----------------------------------------------------------
+
+    def get(self, fingerprint: str, key: PlanKey) -> Optional[Prepared]:
+        with self._lock:
+            ent = self._mem.get((fingerprint, key))
+            if ent is not None:
+                self._mem.move_to_end((fingerprint, key))
+                self._stats["mem_hits"] += 1
+                return ent[0]
+        # disk deserialize happens OUTSIDE the lock: a multi-hundred-MB
+        # plan load must not stall concurrent memory-tier hits
+        p = self._load_disk(fingerprint, key)
+        with self._lock:
+            ent = self._mem.get((fingerprint, key))
+            if ent is not None:  # raced with another loader: prefer it
+                self._mem.move_to_end((fingerprint, key))
+                self._stats["mem_hits"] += 1
+                return ent[0]
+            if p is not None:
+                self._stats["disk_hits"] += 1
+                self._insert(fingerprint, key, p)
+                return p
+            self._stats["misses"] += 1
+            return None
+
+    def put(self, fingerprint: str, key: PlanKey, p: Prepared) -> None:
+        path = payload = None
+        if self.cache_dir:
+            path = os.path.join(self.cache_dir,
+                                _plan_filename(fingerprint, key))
+            if not os.path.exists(path):
+                payload = eng.serialize_prepared(p)  # outside the lock
+        with self._lock:
+            self._stats["puts"] += 1
+            self._insert(fingerprint, key, p)
+        if payload is not None:
+            # disk tier is best-effort on write, like it is on read: a
+            # full/read-only cache dir must not fail a query whose plan
+            # is already good in memory
+            try:
+                tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+                with open(tmp, "wb") as f:
+                    f.write(payload)
+                os.replace(tmp, path)  # atomic vs concurrent readers
+            except OSError:
+                with self._lock:
+                    self._stats["disk_errors"] += 1
+
+    def __contains__(self, fp_key: Tuple[str, PlanKey]) -> bool:
+        with self._lock:
+            return fp_key in self._mem
+
+    # -- internals -------------------------------------------------------
+
+    def _insert(self, fingerprint: str, key: PlanKey, p: Prepared) -> None:
+        k = (fingerprint, key)
+        if k in self._mem:
+            self._bytes -= self._mem[k][1]
+            del self._mem[k]
+        nb = p.nbytes
+        self._mem[k] = (p, nb)
+        self._bytes += nb
+        # never evict the entry just inserted: a single plan larger than
+        # the whole budget must still be servable (the budget overshoots
+        # by one plan rather than degrading to rebuild-per-query)
+        while self._bytes > self.max_bytes and len(self._mem) > 1:
+            _, (_, old_nb) = self._mem.popitem(last=False)
+            self._bytes -= old_nb
+            self._stats["evictions"] += 1
+
+    def _load_disk(self, fingerprint: str,
+                   key: PlanKey) -> Optional[Prepared]:
+        if not self.cache_dir:
+            return None
+        path = os.path.join(self.cache_dir,
+                            _plan_filename(fingerprint, key))
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                return eng.deserialize_prepared(f.read())
+        except (ValueError, OSError, KeyError, EOFError,
+                zipfile.BadZipFile):
+            # stale format / truncated write: drop and rebuild
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+
+    # -- introspection ---------------------------------------------------
+
+    def keys(self) -> List[Tuple[str, PlanKey]]:
+        with self._lock:
+            return list(self._mem)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def stats(self) -> dict:
+        with self._lock:
+            s = dict(self._stats, plans=len(self._mem),
+                     bytes=self._bytes, max_bytes=self.max_bytes)
+            lookups = s["mem_hits"] + s["disk_hits"] + s["misses"]
+            s["hit_rate"] = (s["mem_hits"] + s["disk_hits"]) / lookups \
+                if lookups else 0.0
+            return s
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    name: str
+    spec: QuerySpec
+
+
+class GraphService:
+    """Multi-graph serving gateway: registry + shared plan store + a
+    coalescing request front door.
+
+    All registered graphs borrow plans from one ``PlanStore`` (one byte
+    budget, one eviction policy, one persistence path), so the service —
+    not each session — owns the memory/rebuild trade-off.
+    """
+
+    def __init__(self, max_plan_bytes: int = 256 << 20,
+                 cache_dir: Optional[str] = None,
+                 policy: Optional[ExecutionPolicy] = None,
+                 max_wave: int = 64):
+        self.store = PlanStore(max_bytes=max_plan_bytes,
+                               cache_dir=cache_dir)
+        self.policy = policy
+        self.max_wave = int(max_wave)
+        self._procs: Dict[str, GraphProcessor] = {}
+        self._pending: List[_Pending] = []
+        self._dead: Dict[int, Exception] = {}  # tickets killed by evict()
+        self._next_ticket = 0
+        self._lock = threading.RLock()
+        self._coalesced_queries = 0
+        self._batched_runs = 0
+
+    # -- graph registry --------------------------------------------------
+
+    def register(self, name: str, g: Graph, b: int = 32,
+                 num_clusters: Optional[int] = None,
+                 clustered: bool = True, seed: int = 0,
+                 policy: Optional[ExecutionPolicy] = None
+                 ) -> GraphProcessor:
+        """Admit a graph under ``name``; returns its processor.
+
+        Re-registering the same name with the identical graph AND
+        identical session parameters is a no-op (idempotent restarts);
+        any difference — graph contents, tiling, clustering knobs,
+        default policy — under a live name is an error: ``evict`` first.
+        """
+        with self._lock:
+            if name in self._procs:
+                old = self._procs[name]
+                same = (old.g.fingerprint() == g.fingerprint()
+                        and (old.b, old.num_clusters, old.clustered,
+                             old.seed) == (b, num_clusters, clustered,
+                                           seed)
+                        and old.policy == (policy or self.policy
+                                           or ExecutionPolicy()))
+                if same:
+                    return old
+                raise ValueError(
+                    f"graph name {name!r} is already registered with "
+                    "different contents or session parameters; "
+                    "evict() it first")
+            proc = GraphProcessor(
+                g, b=b, num_clusters=num_clusters, clustered=clustered,
+                seed=seed, policy=policy or self.policy,
+                store=self.store)
+            self._procs[name] = proc
+            return proc
+
+    def get(self, name: str) -> GraphProcessor:
+        try:
+            return self._procs[name]
+        except KeyError:
+            raise KeyError(
+                f"no graph registered as {name!r}; have "
+                f"{sorted(self._procs)}") from None
+
+    def evict(self, name: str) -> None:
+        """Drop a graph from the registry.  Its plans stay in the store
+        (and on disk) until LRU pressure reclaims them — re-registering
+        the same graph later warm-starts.  Pending tickets for the graph
+        are not lost: the next ``gather`` resolves them to a KeyError."""
+        with self._lock:
+            self._procs.pop(name, None)
+            keep = []
+            for q in self._pending:
+                if q.name == name:
+                    self._dead[q.ticket] = KeyError(
+                        f"graph {name!r} was evicted before the query "
+                        "ran")
+                else:
+                    keep.append(q)
+            self._pending = keep
+
+    def graphs(self) -> List[str]:
+        return sorted(self._procs)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._procs
+
+    # -- direct execution ------------------------------------------------
+
+    def run(self, name: str, spec: QuerySpec) -> Result:
+        return self.get(name).run(spec)
+
+    # -- coalescing front door -------------------------------------------
+
+    def submit(self, name: str, spec: QuerySpec) -> int:
+        """Enqueue one query; returns a ticket for ``gather``.
+
+        Invalid requests are rejected here, not at ``gather`` — a bad
+        spec must not poison the batch it would have ridden in.
+        """
+        proc = self.get(name)  # fail fast on unknown graphs
+        validate_spec(spec)
+        proc.resolve_policy(spec)  # surfaces bad params/policy fields
+        with self._lock:
+            t = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append(_Pending(t, name, spec))
+            return t
+
+    def gather(self) -> Dict[int, Union[Result, Exception]]:
+        """Run everything pending and return ``{ticket: Result}``.
+
+        Single-source SSSP/BFS requests that resolve to the same
+        (graph, algorithm, policy) — hence the same plan — are coalesced
+        into batched vmap runs of up to ``max_wave`` sources (waves, as
+        in ``ServeLoop``); each ticket gets its own row of the batch.
+        JAX's while_loop batching masks per-query updates, so coalesced
+        values are identical to what sequential ``run`` calls produce.
+        Everything else (PageRank, CC, already-batched specs, …) runs
+        individually.
+
+        A query that fails at run time — or whose graph was ``evict``-ed
+        while it waited — maps its ticket(s) to the raised exception
+        instead of a ``Result``: every issued ticket resolves, and one
+        bad request never drops the other tickets in the batch.
+
+        Note: a coalesced ticket's ``Result.stats`` is the WAVE's
+        aggregate (work counters total the whole batch; ``sweeps`` is
+        the straggler's) — per-ticket only the ``values`` row is
+        sliced.  ``extra["coalesced"]`` carries the wave size so
+        downstream accounting can tell shared stats from per-query
+        ones.
+        """
+        with self._lock:
+            pending, self._pending = self._pending, []
+            dead, self._dead = self._dead, {}
+        results: Dict[int, Union[Result, Exception]] = dict(dead)
+        waves: Dict[tuple, List[_Pending]] = collections.OrderedDict()
+        for q in pending:
+            try:
+                proc = self.get(q.name)  # may race a concurrent evict()
+            except KeyError as e:
+                results[q.ticket] = e
+                continue
+            if (q.spec.algo in COALESCIBLE and not q.spec.batched
+                    and len(q.spec.sources) == 1):
+                key = (q.name, q.spec.algo, proc.resolve_policy(q.spec))
+                waves.setdefault(key, []).append(q)
+            else:
+                try:
+                    results[q.ticket] = proc.run(q.spec)
+                except Exception as e:  # keep serving the rest
+                    results[q.ticket] = e
+        for (name, algo, pol), group in waves.items():
+            try:
+                proc = self.get(name)
+            except KeyError as e:
+                for q in group:
+                    results[q.ticket] = e
+                continue
+            for i in range(0, len(group), self.max_wave):
+                wave = group[i:i + self.max_wave]
+                try:
+                    if len(wave) == 1:
+                        q = wave[0]
+                        results[q.ticket] = proc.run(q.spec)
+                        continue
+                    sources = tuple(q.spec.sources[0] for q in wave)
+                    batch = proc.run(QuerySpec(algo=algo, sources=sources,
+                                               batched=True, policy=pol))
+                except Exception as e:
+                    for q in wave:
+                        results[q.ticket] = e
+                    continue
+                with self._lock:
+                    self._coalesced_queries += len(wave)
+                    self._batched_runs += 1
+                for row, q in enumerate(wave):
+                    extra = {"algo": algo, "src": sources[row],
+                             "coalesced": len(wave)}
+                    results[q.ticket] = Result(
+                        np.asarray(batch.values[row]), batch.stats,
+                        batch.prepared, extra, policy=pol,
+                        graph=proc.g)
+        return results
+
+    # -- introspection ---------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"graphs": self.graphs(),
+                    "pending": len(self._pending),
+                    "coalesced_queries": self._coalesced_queries,
+                    "batched_runs": self._batched_runs,
+                    "plan_store": self.store.stats()}

@@ -169,6 +169,42 @@ def test_run_spec_params_override_policy(proc):
     assert r.stats.sweeps <= 1 and not r.stats.converged
 
 
+def test_run_spec_params_accepts_plain_dict(proc):
+    spec = api.QuerySpec(algo="sssp", sources=(0,),
+                         params={"max_sweeps": 1, "tol": 1e-3})
+    # dicts normalize to the historical tuple form (spec stays hashable)
+    assert spec.params == (("max_sweeps", 1), ("tol", 1e-3))
+    hash(spec)
+    r = proc.run(spec)
+    assert r.policy.max_sweeps == 1 and r.policy.tol == 1e-3
+    r2 = proc.run(api.QuerySpec(algo="sssp", sources=(0,),
+                                params=(("max_sweeps", 1),
+                                        ("tol", 1e-3))))
+    assert r2.policy == r.policy  # back-compat form still accepted
+    # both forms normalize to one sorted tuple: equivalent specs are
+    # equal and hash equal regardless of input order
+    a = api.QuerySpec(algo="sssp", sources=(0,),
+                      params=(("tol", 1e-3), ("max_sweeps", 1)))
+    assert a == spec and hash(a) == hash(spec)
+
+
+def test_batched_distributed_falls_back_per_source(road, proc):
+    """Satellite: batched mode='distributed' no longer raises — it runs
+    each source through the shard_map engine sequentially and stacks to
+    (Q, n), matching the sync batched oracle."""
+    sources = [0, 3, 7]
+    pol = api.ExecutionPolicy(mode="distributed", max_sweeps=100_000)
+    r = proc.sssp(sources=sources, policy=pol)
+    assert r.values.shape == (len(sources), road.n)
+    assert r.extra["batched_fallback"] == "per-source sequential"
+    assert r.stats.mode == "distributed" and r.stats.converged
+    oracle = proc.sssp(sources=sources,
+                       policy=api.ExecutionPolicy(mode="sync",
+                                                  max_sweeps=100_000))
+    np.testing.assert_allclose(r.values, oracle.values,
+                               rtol=1e-5, atol=1e-4)
+
+
 def test_method_kwargs_merge_into_policy(proc):
     r = proc.pagerank(tol=1e-2, policy=api.ExecutionPolicy(mode="async"))
     assert r.policy.tol == 1e-2 and r.policy.mode == "async"

@@ -1,0 +1,344 @@
+"""Serving gateway: Prepared (de)serialization, the bounded LRU plan
+store with its persistent disk tier, warm restarts, and the coalescing
+submit/gather front door."""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import engine as eng
+from repro.core import graph as G
+from repro.core import oracles as O
+
+
+@pytest.fixture(scope="module")
+def road():
+    return G.road_network(10, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint + Prepared round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_graph_fingerprint_content_based(road):
+    same = G.Graph(n=road.n, indptr=road.indptr.copy(),
+                   indices=road.indices.copy(),
+                   weights=road.weights.copy())
+    assert road.fingerprint() == same.fingerprint()
+    other = G.Graph(n=road.n, indptr=road.indptr, indices=road.indices,
+                    weights=road.weights + 1.0)
+    assert road.fingerprint() != other.fingerprint()
+
+
+def test_prepared_serialize_roundtrip(road):
+    p = api.GraphProcessor(road, b=16, num_clusters=8).prepare("min_plus")
+    p2 = api.deserialize_prepared(api.serialize_prepared(p))
+    for f in eng._PREPARED_DEVICE_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(p2, f)),
+                                      np.asarray(getattr(p, f)), err_msg=f)
+    for f in ("n", "b", "r_pad", "k_max", "gb", "s", "semiring",
+              "tiles_total", "edges_total"):
+        assert getattr(p2, f) == getattr(p, f), f
+    np.testing.assert_array_equal(p2.perm, p.perm)
+    np.testing.assert_array_equal(p2.inv_perm, p.inv_perm)
+    np.testing.assert_array_equal(p2.clustering.schedule,
+                                  p.clustering.schedule)
+    np.testing.assert_array_equal(p2.clustering.assign, p.clustering.assign)
+    # the rebuilt plan is executable and agrees with the original
+    x0 = p2.to_blocks(np.where(np.arange(road.n) == 0, 0.0,
+                               np.inf).astype(np.float32), np.inf)
+    x, stats = eng.run_async(p2, x0)
+    np.testing.assert_allclose(p2.from_blocks(x), O.sssp_oracle(road, 0),
+                               rtol=1e-5, atol=1e-4)
+    assert stats.converged
+
+
+def test_prepared_is_a_pytree(road):
+    import jax
+    p = api.GraphProcessor(road, b=16, num_clusters=8).prepare("min_plus")
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    assert len(leaves) == len(eng._PREPARED_DEVICE_FIELDS)
+    p2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(p2, eng.Prepared)
+    assert p2.semiring == p.semiring and p2.n == p.n
+    np.testing.assert_array_equal(np.asarray(p2.vals), np.asarray(p.vals))
+
+
+def test_deserialize_rejects_future_versions(road):
+    import io
+    import json
+    p = api.GraphProcessor(road, b=16, num_clusters=8).prepare("min_plus")
+    with np.load(io.BytesIO(api.serialize_prepared(p))) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = json.loads(arrays["__meta__"].tobytes().decode())
+    meta["version"] = 99
+    arrays["__meta__"] = np.frombuffer(json.dumps(meta).encode(),
+                                       dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    with pytest.raises(ValueError, match="version"):
+        api.deserialize_prepared(buf.getvalue())
+
+
+# ---------------------------------------------------------------------------
+# PlanStore: LRU byte budget + disk tier
+# ---------------------------------------------------------------------------
+
+
+def _plan_key(i: int) -> api.PlanKey:
+    return api.PlanKey("min_plus", "base", True, None, 16, 4 + i, True)
+
+
+def test_plan_store_lru_eviction_order(road):
+    proc = api.GraphProcessor(road, b=16, num_clusters=8)
+    p = proc.prepare("min_plus")
+    store = api.PlanStore(max_bytes=int(p.nbytes * 2.5))  # fits 2 plans
+    fp = road.fingerprint()
+    store.put(fp, _plan_key(0), p)
+    store.put(fp, _plan_key(1), p)
+    assert (fp, _plan_key(0)) in store and (fp, _plan_key(1)) in store
+    store.get(fp, _plan_key(0))          # touch 0: now 1 is the LRU
+    store.put(fp, _plan_key(2), p)       # over budget → evicts 1, not 0
+    assert (fp, _plan_key(1)) not in store
+    assert (fp, _plan_key(0)) in store and (fp, _plan_key(2)) in store
+    st = store.stats()
+    assert st["evictions"] == 1 and st["plans"] == 2
+    assert st["bytes"] <= store.max_bytes
+    assert store.get(fp, _plan_key(1)) is None  # no disk tier: gone
+
+
+def test_plan_store_disk_tier_backfills_eviction(road, tmp_path):
+    proc = api.GraphProcessor(road, b=16, num_clusters=8)
+    p = proc.prepare("min_plus")
+    store = api.PlanStore(max_bytes=int(p.nbytes * 1.5),  # fits 1 plan
+                          cache_dir=str(tmp_path))
+    fp = road.fingerprint()
+    store.put(fp, _plan_key(0), p)
+    store.put(fp, _plan_key(1), p)       # evicts 0 from memory
+    assert (fp, _plan_key(0)) not in store
+    p0 = store.get(fp, _plan_key(0))     # ... but disk still has it
+    assert p0 is not None
+    np.testing.assert_array_equal(np.asarray(p0.vals), np.asarray(p.vals))
+    assert store.stats()["disk_hits"] == 1
+
+
+def test_processor_borrows_plans_from_injected_store(road, tmp_path):
+    store = api.PlanStore(cache_dir=str(tmp_path))
+    a = api.GraphProcessor(road, b=16, num_clusters=8, store=store)
+    b = api.GraphProcessor(road, b=16, num_clusters=8, store=store)
+    pa = a.prepare("min_plus")
+    pb = b.prepare("min_plus")
+    assert pa is pb                      # one build, shared across sessions
+    assert a._prepare_calls == 1 and b._prepare_calls == 0
+    assert store.stats()["mem_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# GraphService: registry, warm restart, coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_service_registry_lifecycle(road):
+    svc = api.GraphService()
+    svc.register("roads", road, b=16, num_clusters=8)
+    assert "roads" in svc and svc.graphs() == ["roads"]
+    # idempotent re-register of the identical graph
+    assert svc.register("roads", road, b=16, num_clusters=8) is \
+        svc.get("roads")
+    other = G.road_network(6, seed=3)
+    with pytest.raises(ValueError, match="evict"):
+        svc.register("roads", other)
+    with pytest.raises(KeyError, match="no graph registered"):
+        svc.get("nope")
+    svc.evict("roads")
+    assert "roads" not in svc
+
+
+def test_service_warm_restart_skips_compile_pipeline(road, tmp_path,
+                                                     monkeypatch):
+    cache = str(tmp_path / "plans")
+    svc = api.GraphService(cache_dir=cache)
+    svc.register("roads", road, b=16, num_clusters=8)
+    r1 = svc.run("roads", api.QuerySpec(algo="sssp", sources=(0,)))
+
+    # a fresh service ("new process") must serve its first query purely
+    # from the on-disk plan — zero clustering / BSR-build work
+    def boom(*a, **kw):
+        raise AssertionError("compile pipeline ran on a warm restart")
+    monkeypatch.setattr(eng, "prepare", boom)
+    svc2 = api.GraphService(cache_dir=cache)
+    proc2 = svc2.register("roads", road, b=16, num_clusters=8)
+    r2 = svc2.run("roads", api.QuerySpec(algo="sssp", sources=(0,)))
+    assert proc2._prepare_calls == 0
+    assert svc2.store.stats()["disk_hits"] == 1
+    np.testing.assert_array_equal(r1.values, r2.values)
+    np.testing.assert_allclose(r2.values, O.sssp_oracle(road, 0),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gather_coalesces_and_matches_sequential_runs(road):
+    svc = api.GraphService()
+    svc.register("roads", road, b=16, num_clusters=8)
+    sssp_srcs = [0, 3, 7, 11]
+    bfs_srcs = [0, 9]
+    tickets = {}
+    for s in sssp_srcs:
+        tickets[("sssp", s)] = svc.submit(
+            "roads", api.QuerySpec(algo="sssp", sources=(s,)))
+    for s in bfs_srcs:
+        tickets[("bfs", s)] = svc.submit(
+            "roads", api.QuerySpec(algo="bfs", sources=(s,)))
+    t_pr = svc.submit("roads", api.QuerySpec(algo="pagerank"))
+    out = svc.gather()
+    assert set(out) == set(tickets.values()) | {t_pr}
+    # coalesced values are bit-identical to individual run() calls
+    for (algo, s), t in tickets.items():
+        solo = svc.run("roads", api.QuerySpec(algo=algo, sources=(s,)))
+        np.testing.assert_array_equal(out[t].values, solo.values)
+        assert out[t].extra["coalesced"] == \
+            {"sssp": len(sssp_srcs), "bfs": len(bfs_srcs)}[algo]
+        assert out[t].extra["src"] == s
+    np.testing.assert_allclose(
+        out[t_pr].values, O.pagerank_oracle(road, tol=1e-12), atol=1e-5)
+    st = svc.stats()
+    assert st["coalesced_queries"] == len(sssp_srcs) + len(bfs_srcs)
+    assert st["batched_runs"] == 2        # one wave per algorithm
+    assert st["pending"] == 0
+
+
+def test_gather_respects_max_wave_and_policy_grouping(road):
+    svc = api.GraphService(max_wave=2)
+    svc.register("roads", road, b=16, num_clusters=8)
+    sync = api.ExecutionPolicy(mode="sync", max_sweeps=100_000)
+    t = [svc.submit("roads", api.QuerySpec(algo="sssp", sources=(s,)))
+         for s in (0, 3, 7)]                      # waves of 2 then 1
+    t_sync = svc.submit("roads", api.QuerySpec(algo="sssp", sources=(5,),
+                                               policy=sync))
+    out = svc.gather()
+    for ti, s in zip(t, (0, 3, 7)):
+        np.testing.assert_allclose(out[ti].values, O.sssp_oracle(road, s),
+                                   rtol=1e-5, atol=1e-4)
+    # different policy → its own (singleton) group, run directly
+    np.testing.assert_allclose(out[t_sync].values, O.sssp_oracle(road, 5),
+                               rtol=1e-5, atol=1e-4)
+    assert out[t_sync].stats.mode == "sync"
+    assert svc.stats()["coalesced_queries"] == 2  # only the first wave
+
+
+def test_submit_unknown_graph_fails_fast(road):
+    svc = api.GraphService()
+    with pytest.raises(KeyError):
+        svc.submit("ghost", api.QuerySpec(algo="sssp", sources=(0,)))
+
+
+def test_submit_validates_spec_so_bad_requests_cannot_poison_a_batch(road):
+    svc = api.GraphService()
+    svc.register("roads", road, b=16, num_clusters=8)
+    with pytest.raises(ValueError, match="source"):
+        svc.submit("roads", api.QuerySpec(algo="sssp"))
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        svc.submit("roads", api.QuerySpec(algo="warp", sources=(0,)))
+    with pytest.raises(TypeError):  # unknown policy field
+        svc.submit("roads", api.QuerySpec(algo="sssp", sources=(0,),
+                                          params={"warp_speed": 9}))
+    assert svc.stats()["pending"] == 0
+
+
+def test_gather_isolates_runtime_failures_per_ticket(road, monkeypatch):
+    """A query that fails at run time maps its ticket to the exception;
+    every other ticket in the same gather still gets its Result."""
+    svc = api.GraphService()
+    proc = svc.register("roads", road, b=16, num_clusters=8)
+    t_ok = svc.submit("roads", api.QuerySpec(algo="pagerank"))
+    t_bad = svc.submit("roads", api.QuerySpec(algo="cc"))
+    real_run = proc.run
+
+    def flaky(spec):
+        if spec.algo == "cc":
+            raise RuntimeError("engine fell over")
+        return real_run(spec)
+    monkeypatch.setattr(proc, "run", flaky)
+    out = svc.gather()
+    assert isinstance(out[t_bad], RuntimeError)
+    np.testing.assert_allclose(
+        out[t_ok].values, O.pagerank_oracle(road, tol=1e-12), atol=1e-5)
+
+
+def test_evict_resolves_pending_tickets_instead_of_dropping_them(road):
+    svc = api.GraphService()
+    svc.register("roads", road, b=16, num_clusters=8)
+    svc.register("keep", G.road_network(6, seed=3), b=16, num_clusters=4)
+    t_gone = svc.submit("roads", api.QuerySpec(algo="sssp", sources=(0,)))
+    t_kept = svc.submit("keep", api.QuerySpec(algo="sssp", sources=(0,)))
+    svc.evict("roads")
+    out = svc.gather()
+    assert isinstance(out[t_gone], KeyError)         # resolved, not lost
+    assert out[t_kept].stats.converged
+
+
+def test_register_rejects_changed_session_parameters(road):
+    svc = api.GraphService()
+    svc.register("roads", road, b=16, num_clusters=8)
+    with pytest.raises(ValueError, match="evict"):
+        svc.register("roads", road, b=32, num_clusters=8)
+    with pytest.raises(ValueError, match="evict"):
+        svc.register("roads", road, b=16, num_clusters=4)
+
+
+def test_plan_store_recovers_from_corrupt_disk_entries(road, tmp_path):
+    """Truncated/garbage cache files (crash mid-write, disk rot) are
+    dropped and rebuilt, never a permanent crash."""
+    import os
+    proc = api.GraphProcessor(road, b=16, num_clusters=8)
+    p = proc.prepare("min_plus")
+    store = api.PlanStore(cache_dir=str(tmp_path))
+    fp = road.fingerprint()
+    store.put(fp, _plan_key(0), p)
+    (path,) = [tmp_path / f for f in os.listdir(tmp_path)]
+    for garbage in (b"", b"not a zip", path.read_bytes()[:100]):
+        path.write_bytes(garbage)
+        fresh = api.PlanStore(cache_dir=str(tmp_path))
+        assert fresh.get(fp, _plan_key(0)) is None   # dropped, no raise
+        assert not path.exists()
+        store.put(fp, _plan_key(0), p)               # re-persist for next
+
+
+def test_plan_store_disk_write_failure_is_best_effort(road, tmp_path,
+                                                      monkeypatch):
+    """A full/read-only cache dir must not fail a query whose plan is
+    already good in memory."""
+    proc = api.GraphProcessor(road, b=16, num_clusters=8)
+    p = proc.prepare("min_plus")
+    store = api.PlanStore(cache_dir=str(tmp_path))
+
+    def enospc(*a, **kw):
+        raise OSError(28, "No space left on device")
+    monkeypatch.setattr("builtins.open", enospc)
+    store.put(road.fingerprint(), _plan_key(0), p)   # no raise
+    monkeypatch.undo()
+    assert store.get(road.fingerprint(), _plan_key(0)) is p
+    assert store.stats()["disk_errors"] == 1
+
+
+def test_plan_store_keeps_an_oversized_plan(road):
+    """A single plan larger than the whole byte budget must stay
+    servable (budget overshoots by one plan; no rebuild-per-query)."""
+    p = api.GraphProcessor(road, b=16, num_clusters=8).prepare("min_plus")
+    store = api.PlanStore(max_bytes=1)
+    fp = road.fingerprint()
+    store.put(fp, _plan_key(0), p)
+    assert store.get(fp, _plan_key(0)) is p
+    store.put(fp, _plan_key(1), p)       # newest survives, LRU evicted
+    assert store.get(fp, _plan_key(1)) is p
+    assert (fp, _plan_key(0)) not in store
+
+
+def test_service_shares_plans_across_graph_names(road):
+    """The store key is the graph *fingerprint*: the same graph
+    registered under two names builds each plan once."""
+    svc = api.GraphService()
+    a = svc.register("a", road, b=16, num_clusters=8)
+    b = svc.register("b", road, b=16, num_clusters=8)
+    assert a.prepare("min_plus") is b.prepare("min_plus")
+    assert svc.store.stats()["puts"] == 1

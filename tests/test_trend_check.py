@@ -1,0 +1,47 @@
+"""The CI bench-trend gate: regression math and its failure modes
+(missing entries and empty snapshots must not silently pass)."""
+
+from benchmarks import trend_check
+
+
+def _snap(entries):
+    return {"meta": {"scale": 0.002},
+            "fig5": [{"graph": g, "algo": a, "speedup_cpu": s}
+                     for (g, a), s in entries.items()]}
+
+
+BASE = {("ca", "sssp"): 50.0, ("ca", "bfs"): 40.0, ("fb", "sssp"): 20.0}
+
+
+def test_identical_snapshots_pass():
+    assert trend_check.compare(_snap(BASE), _snap(BASE), 0.25) == 0
+
+
+def test_small_drift_within_budget_passes():
+    fresh = {k: v * 0.9 for k, v in BASE.items()}   # -10% geomean
+    assert trend_check.compare(_snap(BASE), _snap(fresh), 0.25) == 0
+
+
+def test_large_regression_fails():
+    fresh = {k: v * 0.5 for k, v in BASE.items()}   # -50% geomean
+    assert trend_check.compare(_snap(BASE), _snap(fresh), 0.25) == 1
+
+
+def test_missing_baseline_entry_fails():
+    fresh = dict(BASE)
+    del fresh[("fb", "sssp")]                        # emission broke
+    assert trend_check.compare(_snap(BASE), _snap(fresh), 0.25) == 1
+
+
+def test_speedup_collapse_to_zero_fails():
+    fresh = {**BASE, ("ca", "sssp"): 0.0}
+    assert trend_check.compare(_snap(BASE), _snap(fresh), 0.25) == 1
+
+
+def test_empty_baseline_skips_gate():
+    assert trend_check.compare(_snap({}), _snap(BASE), 0.25) == 0
+
+
+def test_new_entries_in_fresh_are_tolerated():
+    fresh = {**BASE, ("lj", "cc"): 30.0}             # new algo added
+    assert trend_check.compare(_snap(BASE), _snap(fresh), 0.25) == 0
