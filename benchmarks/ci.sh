@@ -1,11 +1,32 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite + CPU smoke of the session-API
 # quickstart.  Mirrors .github/workflows/ci.yml for local use.
+#
+# DEVICES=N (default 1) switches to the multi-device lane: the process
+# gets N fake host devices (XLA_FLAGS=--xla_force_host_platform_device_
+# count=N) so the distributed engines — including the 2-D
+# ("graph", "query") batched mesh — run in-process against a real
+# device grid instead of only via subprocess tests.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+DEVICES="${DEVICES:-1}"
+
+if [ "$DEVICES" -gt 1 ]; then
+    export XLA_FLAGS="--xla_force_host_platform_device_count=${DEVICES}${XLA_FLAGS:+ ${XLA_FLAGS}}"
+    echo "== multi-device lane: distributed engines on ${DEVICES} fake host devices =="
+    # distribution suite (2-D mesh parity across factorizations runs
+    # in-process here) + the session-API suite (batched distributed
+    # dispatch through GraphProcessor/ExecutionPolicy)
+    python -m pytest -x -q tests/test_distribution.py tests/test_api.py
+    echo "== batched distributed sweep family (${DEVICES} devices) =="
+    python -m benchmarks.run --scale 0.002 --json BENCH_multidev.json \
+        --skip fig5 fig6 avs kernel lm
+    echo "CI OK (multi-device, DEVICES=${DEVICES})"
+    exit 0
+fi
 
 echo "== tier-1 pytest =="
 python -m pytest -x -q

@@ -80,6 +80,25 @@ def run_algo(g, algo: str, mode: str, b: int = 16, num_clusters: int = 64):
     return r, wall
 
 
+def run_batched(g, algo: str, sources, mode: str = "distributed",
+                query_axis=None, b: int = 16, num_clusters: int = 64):
+    """Multi-source batched run (the ``distributed_batched`` sweep
+    family's entry point).  ``query_axis=None`` auto-factors the device
+    count over the 2-D ("graph", "query") mesh; ``query_axis=0`` is the
+    per-source sequential escape hatch used as the comparison baseline."""
+    proc = processor(g, b, num_clusters)
+    pol = api.ExecutionPolicy(mode=mode, max_sweeps=100_000,
+                              query_axis=query_axis)
+    t0 = time.time()
+    if algo == "sssp":
+        r = proc.sssp(sources=list(sources), policy=pol)
+    elif algo == "bfs":
+        r = proc.bfs(sources=list(sources), policy=pol)
+    else:
+        raise ValueError(f"batched family supports sssp|bfs, not {algo}")
+    return r, time.time() - t0
+
+
 def platform_reports(g, algo: str, b: int = 16, num_clusters: int = 64):
     """(nale, cpu, gpu) PlatformReports for one (graph, algorithm)."""
     ra, wall_a = run_algo(g, algo, "async", b, num_clusters)

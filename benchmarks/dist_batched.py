@@ -1,0 +1,70 @@
+"""``distributed_batched`` sweep family: Q-source SSSP/BFS through the
+2-D ("graph" × "query") mesh engine vs the retired per-source sequential
+loop (the ``query_axis=0`` escape hatch).
+
+Both paths are bit-identical in VALUES; what the batch buys is dispatch
+parallelism, so the speedup is MODELED the same way fig5 models
+platforms: per-query NALE critical paths from the measured sweep counts,
+executed back-to-back (sequential) vs in straggler-bound query-waves on
+a reference 8-device node (the CI multi-device lane's shape).  Modeled
+numbers are deterministic for a given scale/seed regardless of how many
+real devices this process has — the trend gate depends on engine work
+counters, not the host.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core import placement as PL
+from repro.core import power as PW
+
+from . import common
+
+QUERIES = 4        # sources per batch
+REF_DEVICES = 8    # modeled node size (matches the CI multi-device lane)
+
+
+def run(graphs=None, emit=common.csv_line):
+    graphs = graphs or common.load_graphs()
+    rows = []
+    for gname, g in graphs.items():
+        sources = [int(s) for s in
+                   np.linspace(0, g.n - 1, QUERIES, dtype=np.int64)]
+        for algo in ("sssp", "bfs"):
+            rb, wall_b = common.run_batched(g, algo, sources)
+            rs, wall_s = common.run_batched(g, algo, sources,
+                                            query_axis=0)
+            dist = rb.extra["dist"]
+            p = rb.prepared
+            qs = dist.query_sweeps
+            # sequential: Q dispatches back to back — cycles add up
+            seq_s = sum(
+                PW.model_nale(p, eng.bsp_stats(p, int(sq), True,
+                                               "distributed")).time_s
+                for sq in qs)
+            # batched: queries ride concurrently over the "query" axis;
+            # each wave of q_ref is bound by its straggler
+            q_ref = PL.factor_query_axis(REF_DEVICES, len(sources))
+            waves = -(-len(sources) // q_ref)
+            bat_s = waves * PW.model_nale(
+                p, eng.bsp_stats(p, int(qs.max(initial=0)), True,
+                                 "distributed")).time_s
+            speedup = seq_s / max(bat_s, 1e-12)
+            emit(f"dist_batched/{gname}/{algo}", wall_b * 1e6,
+                 f"Q={len(sources)} mesh={dist.mesh_shape} "
+                 f"straggler={dist.sweeps} "
+                 f"work_sweeps={int(qs.sum())} "
+                 f"modeled_speedup={speedup:.2f}x")
+            rows.append(dict(
+                graph=gname, algo=algo, queries=len(sources),
+                mesh_graph=dist.mesh_shape[0],
+                mesh_query=dist.mesh_shape[1],
+                sweeps=dist.sweeps,
+                query_sweeps=[int(sq) for sq in qs],
+                work_sweeps=int(qs.sum()),
+                ref_devices=REF_DEVICES, ref_query_axis=q_ref,
+                speedup_vs_sequential=speedup,
+                wall_batched_s=wall_b, wall_sequential_s=wall_s))
+    return rows

@@ -20,8 +20,8 @@ import json
 
 import numpy as np
 
-from . import async_vs_sync, common, fig5_cycles, fig6_power, \
-    kernel_bench, lm_bench
+from . import async_vs_sync, common, dist_batched, fig5_cycles, \
+    fig6_power, kernel_bench, lm_bench
 
 
 def main() -> None:
@@ -33,7 +33,8 @@ def main() -> None:
                     help="output path for the machine-readable snapshot "
                          "('' disables)")
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=["fig5", "fig6", "avs", "kernel", "lm"])
+                    choices=["fig5", "fig6", "avs", "dist", "kernel",
+                             "lm"])
     args = ap.parse_args()
 
     graphs = common.load_graphs(args.scale)
@@ -50,6 +51,8 @@ def main() -> None:
         out["fig6"] = fig6_power.run(graphs)
     if "avs" not in args.skip:
         out["async_vs_sync"] = async_vs_sync.run(graphs)
+    if "dist" not in args.skip:
+        out["distributed_batched"] = dist_batched.run(graphs)
     if "kernel" not in args.skip:
         out["kernel"] = kernel_bench.run(graphs)
     if "lm" not in args.skip:
@@ -76,6 +79,12 @@ def main() -> None:
               if "work_reduction" in r]
         print(f"async work reduction (measured): geomean "
               f"{np.exp(np.log(wr).mean()):.2f}x over bulk-synchronous")
+    if "distributed_batched" in out:
+        ds = np.array([r["speedup_vs_sequential"]
+                       for r in out["distributed_batched"]])
+        print(f"batched distributed dispatch (modeled, "
+              f"{dist_batched.REF_DEVICES}-device node): geomean "
+              f"{np.exp(np.log(ds).mean()):.2f}x vs per-source loop")
 
     # --- serving-layer accounting --------------------------------------
     store = common.service().store.stats()

@@ -1,16 +1,21 @@
 """Bench-trend gate: diff a fresh ``BENCH_graph.json`` against the
 committed snapshot and fail CI on a modeled-speedup regression.
 
-The modeled NALE-vs-CPU speedups (fig5) are deterministic for a given
-scale/seed, so any drift is a real change in engine work counters or the
-compile pipeline — exactly what a perf-regression gate should catch.
+The modeled speedups (fig5's NALE-vs-CPU, distributed_batched's
+batch-vs-sequential dispatch) are deterministic for a given scale/seed,
+so any drift is a real change in engine work counters or the compile
+pipeline — exactly what a perf-regression gate should catch.
 
   python -m benchmarks.trend_check BASELINE FRESH [--threshold 0.25]
 
-Exits non-zero when the geomean modeled speedup over the (graph, algo)
-pairs present in both snapshots regresses by more than ``threshold``
-(default 25%).  Also reports per-entry drift and the fresh run's
-plan-store hit rate.
+Each gated sweep family is compared independently: exits non-zero when a
+family's geomean modeled speedup over the entries present in both
+snapshots regresses by more than ``threshold`` (default 25%), or when a
+baseline entry vanishes from a family both snapshots carry.  A family
+present in only ONE snapshot (e.g. the baseline predates the family, or
+a lane skipped it) is skipped with a warning instead of failing — new
+sweep families must not require lock-step snapshot refreshes to land.
+Also reports per-entry drift and the fresh run's plan-store hit rate.
 """
 
 from __future__ import annotations
@@ -28,22 +33,28 @@ def _fig5_speedups(snapshot: dict) -> dict:
             if r.get("speedup_cpu") is not None}
 
 
-def compare(baseline: dict, fresh: dict, threshold: float) -> int:
-    base = _fig5_speedups(baseline)
-    new = _fig5_speedups(fresh)
-    if not base:
-        # nothing to gate against (e.g. baseline was taken with fig5
-        # skipped) — the only case where passing vacuously is right
-        print("trend: baseline snapshot has no fig5 entries — "
-              "skipping gate")
-        return 0
+def _dist_batched_speedups(snapshot: dict) -> dict:
+    return {(r["graph"], r["algo"]): float(r["speedup_vs_sequential"])
+            for r in snapshot.get("distributed_batched", [])
+            if r.get("speedup_vs_sequential") is not None}
+
+
+# family name -> extractor of {entry_key: modeled_speedup}
+FAMILIES = {
+    "fig5": _fig5_speedups,
+    "distributed_batched": _dist_batched_speedups,
+}
+
+
+def _compare_family(family: str, base: dict, new: dict,
+                    threshold: float) -> int:
     missing = sorted(set(base) - set(new))
     if missing:
-        # a baseline entry vanishing from the fresh run is itself a
-        # regression (broken emission, renamed keys, dropped algo) —
-        # never let it silently shrink the comparison
-        print(f"trend: FAIL — {len(missing)} baseline entries missing "
-              f"from the fresh snapshot: {missing}")
+        # a baseline entry vanishing from a family BOTH snapshots carry
+        # is itself a regression (broken emission, renamed keys, dropped
+        # algo) — never let it silently shrink the comparison
+        print(f"trend: FAIL — {family}: {len(missing)} baseline entries "
+              f"missing from the fresh snapshot: {missing}")
         return 1
     shared = sorted(base)
     ratios = []
@@ -51,21 +62,49 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> int:
         ratio = max(new[k], 1e-12) / max(base[k], 1e-12)
         ratios.append(ratio)
         flag = "  << regressed" if ratio < 1.0 - threshold else ""
-        print(f"trend: {k[0]:>4s}/{k[1]:<9s} speedup "
+        name = "/".join(str(part) for part in k)
+        print(f"trend: {family}/{name:<14s} speedup "
               f"{base[k]:9.2f} -> {new[k]:9.2f}  ({ratio:6.3f}x){flag}")
     geo = float(np.exp(np.log(ratios).mean()))
-    print(f"trend: geomean modeled-speedup ratio {geo:.3f}x over "
-          f"{len(shared)} entries (gate: >{1.0 - threshold:.2f})")
+    print(f"trend: {family}: geomean modeled-speedup ratio {geo:.3f}x "
+          f"over {len(shared)} entries (gate: >{1.0 - threshold:.2f})")
+    if geo < 1.0 - threshold:
+        print(f"trend: FAIL — {family}: modeled speedup regressed "
+              f"{(1.0 - geo):.1%} (> {threshold:.0%} budget)")
+        return 1
+    return 0
+
+
+def compare(baseline: dict, fresh: dict, threshold: float) -> int:
+    rc = 0
+    gated = 0
+    for family, extract in FAMILIES.items():
+        base = extract(baseline)
+        new = extract(fresh)
+        if not base and not new:
+            continue
+        if not base or not new:
+            only_in = "fresh" if not base else "baseline"
+            print(f"trend: WARNING — family {family!r} present only in "
+                  f"the {only_in} snapshot — skipping it (refresh the "
+                  "committed snapshot to start gating it)")
+            continue
+        gated += 1
+        rc = max(rc, _compare_family(family, base, new, threshold))
+    if not gated:
+        # nothing to gate against (e.g. baseline was taken with every
+        # family skipped) — the only case where passing vacuously is
+        # right
+        print("trend: no sweep family present in both snapshots — "
+              "skipping gate")
+        return rc
     store = fresh.get("plan_store")
     if store:
         print(f"trend: plan-store hit rate {store['hit_rate']:.1%} "
               f"({store['plans']} plans, {store['misses']} builds)")
-    if geo < 1.0 - threshold:
-        print(f"trend: FAIL — modeled speedup regressed "
-              f"{(1.0 - geo):.1%} (> {threshold:.0%} budget)")
-        return 1
-    print("trend: OK")
-    return 0
+    if rc == 0:
+        print("trend: OK")
+    return rc
 
 
 def main() -> int:

@@ -47,10 +47,15 @@ class ExecutionPolicy:
 
     mode:  "sync" (BSP/Jacobi baseline) | "async" (the paper's self-timed
            cluster-dataflow engine) | "distributed" (shard_map halo-
-           exchange engine over the 'graph' mesh axis).
+           exchange engine over the 2-D ("graph", "query") mesh).
     impl:  "ref" (XLA-fused jnp) | "pallas" (Mosaic kernel; interpret
            mode off-TPU).  The distributed engine always uses "ref"
            (Pallas calls cannot be SPMD-partitioned across host meshes).
+    query_axis:  batched-distributed mesh factorization.  None (default)
+           auto-factors the device count against the batch size
+           (``placement.factor_query_axis``); an int >= 1 pins the
+           "query" mesh extent (must divide the device count); 0 is the
+           escape hatch back to the retired per-source sequential loop.
     """
 
     mode: str = "async"
@@ -58,12 +63,17 @@ class ExecutionPolicy:
     damping: float = 0.85
     tol: float = 1e-6
     max_sweeps: int = 10_000
+    query_axis: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}: {self.mode!r}")
         if self.impl not in IMPLS:
             raise ValueError(f"impl must be one of {IMPLS}: {self.impl!r}")
+        if self.query_axis is not None and self.query_axis < 0:
+            raise ValueError(
+                "query_axis must be None (auto), 0 (per-source "
+                f"fallback) or a positive extent: {self.query_axis!r}")
 
     def but(self, **kw) -> "ExecutionPolicy":
         """Copy with overrides (policy objects are frozen)."""
@@ -390,23 +400,28 @@ class GraphProcessor:
         if not sources:
             raise ValueError("batched query needs at least one source")
         if pol.mode == "distributed":
-            # The shard_map engine has no batched (vmap) path — the query
-            # axis would need a second mesh dim.  Documented fallback:
-            # run each source through the distributed engine in turn and
-            # stack to (Q, n); `sweeps` is the straggler's, work counters
-            # are totals across the query axis.
-            xs, sweeps, conv = [], [], []
-            for s in sources:
-                x0q = p.to_blocks(x0f(s), pad)
-                xq, st, _ = self._dispatch(pol, p, x0q, apply_kind, s)
-                xs.append(xq)
-                sweeps.append(st.sweeps)
-                conv.append(st.converged)
-            stats = eng.bsp_stats(p, max(sweeps), all(conv),
-                                  "distributed", work_sweeps=sum(sweeps))
-            values = np.stack([post(p.from_blocks(xq)) for xq in xs])
-            extra = {"algo": spec.algo, "sources": sources,
-                     "batched_fallback": "per-source sequential"}
+            if pol.query_axis == 0:
+                return self._run_batched_dist_fallback(
+                    spec, pol, p, x0f, pad, apply_kind, post, sources)
+            # One 2-D shard_map dispatch: rows over "graph", the query
+            # axis over "query" (placement.distributed_sync_run_batched).
+            # Bit-identical to the per-source sequential path; `sweeps`
+            # is the straggler's, work counters total the query axis.
+            # Stack on host: the engine pads/shards the frontier itself,
+            # so a device-resident stack would round-trip pointlessly.
+            from . import placement
+            x0 = np.stack([np.asarray(p.to_blocks(x0f(s), pad))
+                           for s in sources])
+            x, dist = placement.distributed_sync_run_batched(
+                p, x0, apply_kind=apply_kind, damping=pol.damping,
+                tol=pol.tol, max_sweeps=pol.max_sweeps,
+                query_axis=pol.query_axis)
+            stats = eng.bsp_stats(
+                p, dist.sweeps, dist.converged, "distributed",
+                work_sweeps=int(dist.query_sweeps.sum()))
+            values = np.stack([post(p.from_blocks(x[q]))
+                               for q in range(len(sources))])
+            extra = {"algo": spec.algo, "sources": sources, "dist": dist}
             return Result(values, stats, p, extra, policy=pol,
                           graph=self.g)
         x0 = jnp.stack([p.to_blocks(x0f(s), pad) for s in sources])
@@ -421,6 +436,27 @@ class GraphProcessor:
                            for q in range(len(sources))])
         extra = {"algo": spec.algo, "sources": sources}
         return Result(values, stats, p, extra, policy=pol, graph=self.g)
+
+    def _run_batched_dist_fallback(self, spec, pol, p, x0f, pad,
+                                   apply_kind, post, sources) -> Result:
+        """``query_axis=0`` escape hatch: the retired per-source loop
+        through the sequential distributed engine.  Kept for debugging
+        mesh factorizations against a known-serial reference — the
+        default batched path is one 2-D shard_map dispatch."""
+        xs, sweeps, conv = [], [], []
+        for s in sources:
+            x0q = p.to_blocks(x0f(s), pad)
+            xq, st, _ = self._dispatch(pol, p, x0q, apply_kind, s)
+            xs.append(xq)
+            sweeps.append(st.sweeps)
+            conv.append(st.converged)
+        stats = eng.bsp_stats(p, max(sweeps), all(conv),
+                              "distributed", work_sweeps=sum(sweeps))
+        values = np.stack([post(p.from_blocks(xq)) for xq in xs])
+        extra = {"algo": spec.algo, "sources": sources,
+                 "batched_fallback": "per-source sequential"}
+        return Result(values, stats, p, extra, policy=pol,
+                      graph=self.g)
 
     # -- the paper's six algorithms (+ reachability) ---------------------
 

@@ -18,7 +18,7 @@ Everything here is one-time host-side preprocessing (numpy).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

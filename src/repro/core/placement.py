@@ -1,14 +1,21 @@
 """Cluster → device placement and the distributed graph engine.
 
 Paper mapping: inter-NALE FIFOs become inter-device halo exchange.  Row
-groups (clusters) are placed contiguously on a 1-D "graph" mesh axis by
-``cluster.place_clusters``; each sweep a device gathers the frontier
-values it needs (here: tiled all_gather — the collective the roofline
-charges; the edge-cut from clustering bounds the useful fraction) and
-computes its local rows.
+groups (clusters) are placed contiguously on the "graph" axis of a 2-D
+``("graph", "query")`` mesh by ``cluster.place_clusters``; each sweep a
+device gathers the frontier values it needs (here: tiled all_gather —
+the collective the roofline charges; the edge-cut from clustering bounds
+the useful fraction) and computes its local rows.
+
+The second mesh axis carries concurrent queries: the paper's
+task-to-element mapping composes at both levels (PIUMA / GraphScale make
+the same point), so multi-source frontiers shard over "query" while the
+partitioned graph shards over "graph" — halo exchange stays confined to
+"graph" because queries are independent.  ``query=1`` degenerates to the
+historical 1-D behavior.
 
 Works on 1 real device (tests), on N fake host devices (subprocess tests,
-dry-run) and unchanged on a real pod slice.
+the CI multi-device lane, dry-run) and unchanged on a real pod slice.
 """
 
 from __future__ import annotations
@@ -28,13 +35,39 @@ if _shard_map is None:  # pragma: no cover - version dependent
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from . import semiring as sr
-from .engine import Prepared, RunStats, _apply
+from .engine import Prepared, _apply
 from ..kernels import ref as kref
 
 
-def make_graph_mesh(num_devices: Optional[int] = None) -> Mesh:
+def make_graph_mesh(num_devices: Optional[int] = None,
+                    query_axis: int = 1) -> Mesh:
+    """2-D ``("graph", "query")`` device mesh.
+
+    ``num_devices`` (default: all) are factored as
+    ``graph = num_devices // query_axis``; ``query_axis=1`` is the
+    degenerate 1-D layout every pre-existing caller gets.
+    """
     n = num_devices or len(jax.devices())
-    return jax.make_mesh((n,), ("graph",))
+    q = int(query_axis)
+    if q < 1:
+        raise ValueError(f"query_axis must be >= 1, got {q}")
+    if n % q:
+        raise ValueError(
+            f"query_axis={q} does not divide {n} devices; pick a "
+            f"divisor of the device count (see factor_query_axis)")
+    return jax.make_mesh((n // q, q), ("graph", "query"))
+
+
+def factor_query_axis(num_devices: int, num_queries: int) -> int:
+    """Auto-factor the device count for a Q-source batch: the largest
+    divisor of ``num_devices`` not exceeding ``num_queries``, so both
+    mesh axes stay as full as the batch allows (q queries can't feed
+    more than q query-shards; leftover devices go to "graph")."""
+    q = max(int(num_queries), 1)
+    for cand in range(min(q, num_devices), 0, -1):
+        if num_devices % cand == 0:
+            return cand
+    return 1
 
 
 @dataclasses.dataclass
@@ -43,6 +76,8 @@ class DistStats:
     converged: bool
     halo_bytes_per_sweep: float   # all_gather payload (per device)
     cut_fraction: float
+    mesh_shape: Tuple[int, int] = (1, 1)       # (graph, query) extent
+    query_sweeps: Optional[np.ndarray] = None  # per-query sweep counts
 
 
 def _pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:
@@ -104,13 +139,134 @@ def distributed_sync_run(
     halo = (r_pad // d) * p.b * 4.0 * (d - 1)  # gathered remote bytes/device
     stats = DistStats(sweeps=int(i[0]), converged=bool(done[0]),
                       halo_bytes_per_sweep=float(halo),
-                      cut_fraction=p.clustering.cut_fraction)
+                      cut_fraction=p.clustering.cut_fraction,
+                      mesh_shape=(d, dict(mesh.shape).get("query", 1)))
     return x[: p.r_pad], stats
 
 
-def lower_distributed(p: Prepared, mesh: Mesh, apply_kind: str = "relax"):
-    """Lower (no execution) the distributed sweep for dry-run inspection."""
-    d = mesh.shape["graph"]
+def distributed_sync_run_batched(
+        p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
+        damping: float = 0.85, tol: float = 1e-6, max_sweeps: int = 10_000,
+        mesh: Optional[Mesh] = None, query_axis: Optional[int] = None
+        ) -> Tuple[jnp.ndarray, DistStats]:
+    """Batched distributed engine: ONE shard_map dispatch over the 2-D
+    ``("graph", "query")`` mesh for a stacked ``(Q, r_pad, B)`` frontier.
+
+    Rows shard over "graph" exactly as in :func:`distributed_sync_run`;
+    the query axis shards over "query".  Halo exchange (the tiled
+    all_gather of frontier values) runs only along "graph" — queries are
+    independent, so no bytes cross the "query" axis except the scalar
+    convergence vote.  Each query freezes (bit-exactly, including its
+    final no-improvement sweep — the same last write the sequential loop
+    does) once it individually converges, so results are bit-identical
+    to running the sources one at a time through the sequential
+    distributed engine, for any mesh factorization.
+
+    ``query_axis``: explicit "query" extent (must divide the device
+    count); None auto-factors via :func:`factor_query_axis`.  Ignored
+    when ``mesh`` is given.
+    """
+    Q = int(x0.shape[0])
+    if query_axis is not None and query_axis < 1:
+        # the query_axis=0 per-source escape hatch lives one layer up
+        # (GraphProcessor._run_batched) — the engine itself must never
+        # silently reinterpret 0 as "auto-factor"
+        raise ValueError(
+            "distributed_sync_run_batched needs query_axis=None (auto) "
+            f"or >= 1, got {query_axis}; the query_axis=0 per-source "
+            "loop is dispatched by the session API, not the engine")
+    if mesh is None:
+        ndev = len(jax.devices())
+        mesh = make_graph_mesh(
+            ndev, query_axis or factor_query_axis(ndev, Q))
+    shape = dict(mesh.shape)
+    d_g = shape["graph"]
+    d_q = shape.get("query", 1)
+    ring = sr.get(p.semiring)
+
+    r_pad = ((p.r_pad + d_g - 1) // d_g) * d_g
+    vals = _pad_rows(np.asarray(p.vals), r_pad)
+    cols = _pad_rows(np.asarray(p.cols), r_pad)
+    nnz = _pad_rows(np.asarray(p.nnz), r_pad)
+    valid = _pad_rows(np.asarray(p.valid), r_pad)
+    q_pad = ((Q + d_q - 1) // d_q) * d_q
+    x0 = np.asarray(x0)
+    x0 = np.concatenate(
+        [x0, np.zeros((q_pad - Q,) + x0.shape[1:], x0.dtype)])
+    x0 = np.stack([_pad_rows(x0[qi], r_pad) for qi in range(q_pad)])
+    if p.semiring in ("min_plus", "min_select"):
+        # padding rows must not corrupt min-reductions
+        x0[:, p.r_pad:] = np.inf
+    # padding queries start converged: frozen from sweep 0, zero work
+    qlive = np.arange(q_pad) < Q
+    inv_n = jnp.float32(1.0 / max(p.n, 1))
+    damping = jnp.float32(damping)
+    tol = jnp.float32(tol)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(P("graph"), P("graph"), P("graph"), P("graph"),
+                  P("query", "graph"), P("query")),
+        out_specs=(P("query", "graph"), P("query"), P("query")),
+        check_rep=False)
+    def run(vals_l, cols_l, nnz_l, valid_l, x_l, qlive_l):
+        spmv = jax.vmap(
+            lambda xq: kref.bsr_spmv_ref(vals_l, cols_l, xq, p.semiring))
+
+        def cond(st):
+            i, x, done_q, sweeps_q, all_done = st
+            return (~all_done) & (i < max_sweeps)
+
+        def body(st):
+            i, x, done_q, sweeps_q, _ = st
+            # halo exchange: ONLY along "graph" — queries are independent
+            xg = jax.lax.all_gather(x, "graph", axis=1, tiled=True)
+            y = spmv(xg)
+            x_new, imp = _apply(apply_kind, ring, y, x, valid_l[None],
+                                damping, inv_n, tol)
+            live = ~done_q
+            # a live query's final (no-improvement) sweep still writes
+            # x_new and counts — exactly like the sequential while_loop
+            x = jnp.where(live[:, None, None], x_new, x)
+            sweeps_q = sweeps_q + live.astype(jnp.int32)
+            imp_q = jax.lax.psum(
+                jnp.any(imp, axis=(1, 2)).astype(jnp.int32), "graph") > 0
+            done_q = done_q | ~imp_q
+            # scalar convergence vote — the only cross-"query" traffic
+            open_n = jax.lax.psum(jnp.sum(~done_q), "query")
+            return i + 1, x, done_q, sweeps_q, open_n == 0
+
+        done0 = ~qlive_l
+        st = (jnp.int32(0), x_l, done0,
+              jnp.zeros(x_l.shape[0], jnp.int32), jnp.array(False))
+        _, x, done_q, sweeps_q, _ = jax.lax.while_loop(cond, body, st)
+        return x, sweeps_q, done_q
+
+    x, sweeps_q, done_q = run(
+        jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(nnz),
+        jnp.asarray(valid), jnp.asarray(x0), jnp.asarray(qlive))
+    sweeps_q = np.asarray(sweeps_q)[:Q]
+    halo = (r_pad // d_g) * p.b * 4.0 * (d_g - 1) * (q_pad // d_q)
+    stats = DistStats(
+        sweeps=int(sweeps_q.max(initial=0)),
+        converged=bool(np.all(np.asarray(done_q)[:Q])),
+        halo_bytes_per_sweep=float(halo),
+        cut_fraction=p.clustering.cut_fraction,
+        mesh_shape=(d_g, d_q), query_sweeps=sweeps_q)
+    return x[:Q, : p.r_pad], stats
+
+
+def lower_distributed(p: Prepared, mesh: Mesh, apply_kind: str = "relax",
+                      batch: Optional[int] = None):
+    """Lower (no execution) the distributed sweep for dry-run inspection.
+
+    ``batch=Q`` lowers the 2-D batched sweep instead: a ``(Q, r_pad, B)``
+    frontier sharded ``P("query", "graph")`` — the collective layout CI
+    and dry-run tooling inspect to confirm the halo exchange stays on
+    "graph"."""
+    shape = dict(mesh.shape)
+    d = shape["graph"]
+    d_q = shape.get("query", 1)
     r_pad = ((p.r_pad + d - 1) // d) * d
     ring = sr.get(p.semiring)
     shard = NamedSharding(mesh, P("graph"))
@@ -118,12 +274,21 @@ def lower_distributed(p: Prepared, mesh: Mesh, apply_kind: str = "relax"):
     def one_sweep(vals, cols, nnz, valid, x):
         @functools.partial(
             _shard_map, mesh=mesh,
-            in_specs=(P("graph"),) * 5, out_specs=P("graph"),
+            in_specs=(P("graph"),) * 4 + (
+                P("query", "graph") if batch else P("graph"),),
+            out_specs=P("query", "graph") if batch else P("graph"),
             check_rep=False)
         def sweep(vals_l, cols_l, nnz_l, valid_l, x_l):
-            xg = jax.lax.all_gather(x_l, "graph", tiled=True)
-            y = kref.bsr_spmv_ref(vals_l, cols_l, xg, p.semiring)
-            x_new, _ = _apply(apply_kind, ring, y, x_l, valid_l,
+            if batch:
+                xg = jax.lax.all_gather(x_l, "graph", axis=1, tiled=True)
+                y = jax.vmap(lambda xq: kref.bsr_spmv_ref(
+                    vals_l, cols_l, xq, p.semiring))(xg)
+                valid_b = valid_l[None]
+            else:
+                xg = jax.lax.all_gather(x_l, "graph", tiled=True)
+                y = kref.bsr_spmv_ref(vals_l, cols_l, xg, p.semiring)
+                valid_b = valid_l
+            x_new, _ = _apply(apply_kind, ring, y, x_l, valid_b,
                               jnp.float32(0.85), jnp.float32(1.0 / p.n),
                               jnp.float32(1e-6))
             return x_new
@@ -134,6 +299,13 @@ def lower_distributed(p: Prepared, mesh: Mesh, apply_kind: str = "relax"):
         jax.ShapeDtypeStruct((r_pad, p.k_max), jnp.int32, sharding=shard),
         jax.ShapeDtypeStruct((r_pad,), jnp.int32, sharding=shard),
         jax.ShapeDtypeStruct((r_pad, p.b), jnp.bool_, sharding=shard),
-        jax.ShapeDtypeStruct((r_pad, p.b), jnp.float32, sharding=shard),
     ]
+    if batch:
+        q_pad = ((int(batch) + d_q - 1) // d_q) * d_q
+        specs.append(jax.ShapeDtypeStruct(
+            (q_pad, r_pad, p.b), jnp.float32,
+            sharding=NamedSharding(mesh, P("query", "graph"))))
+    else:
+        specs.append(jax.ShapeDtypeStruct(
+            (r_pad, p.b), jnp.float32, sharding=shard))
     return jax.jit(one_sweep).lower(*specs)

@@ -316,12 +316,17 @@ class GraphService:
 
         Single-source SSSP/BFS requests that resolve to the same
         (graph, algorithm, policy) — hence the same plan — are coalesced
-        into batched vmap runs of up to ``max_wave`` sources (waves, as
-        in ``ServeLoop``); each ticket gets its own row of the batch.
-        JAX's while_loop batching masks per-query updates, so coalesced
-        values are identical to what sequential ``run`` calls produce.
-        Everything else (PageRank, CC, already-batched specs, …) runs
-        individually.
+        into batched runs of up to ``max_wave`` sources (waves, as in
+        ``ServeLoop``); each ticket gets its own row of the batch.  The
+        wave executes on whatever engine the resolved policy names: vmap
+        over the sync/async engines, or — for ``mode="distributed"`` —
+        ONE 2-D ``("graph", "query")`` shard_map dispatch
+        (``placement.distributed_sync_run_batched``), so a distributed
+        plan's wave scales over both mesh axes instead of looping
+        per source.  Per-query convergence is masked in all engines, so
+        coalesced values are identical to what sequential ``run`` calls
+        produce.  Everything else (PageRank, CC, already-batched specs,
+        …) runs individually.
 
         A query that fails at run time — or whose graph was ``evict``-ed
         while it waited — maps its ticket(s) to the raised exception
@@ -382,6 +387,11 @@ class GraphService:
                 for row, q in enumerate(wave):
                     extra = {"algo": algo, "src": sources[row],
                              "coalesced": len(wave)}
+                    for k in ("dist", "batched_fallback"):
+                        # distributed waves: surface the engine's mesh
+                        # factorization / per-query sweeps per ticket
+                        if k in batch.extra:
+                            extra[k] = batch.extra[k]
                     results[q.ticket] = Result(
                         np.asarray(batch.values[row]), batch.stats,
                         batch.prepared, extra, policy=pol,

@@ -188,21 +188,41 @@ def test_run_spec_params_accepts_plain_dict(proc):
     assert a == spec and hash(a) == hash(spec)
 
 
-def test_batched_distributed_falls_back_per_source(road, proc):
-    """Satellite: batched mode='distributed' no longer raises — it runs
-    each source through the shard_map engine sequentially and stacks to
-    (Q, n), matching the sync batched oracle."""
+def test_batched_distributed_is_single_2d_dispatch(road, proc):
+    """Tentpole: batched mode='distributed' runs as ONE 2-D shard_map
+    dispatch (no per-source Python loop) — `dist.batched_fallback` must
+    NOT appear in Result extras by default — and matches the sync
+    batched oracle."""
     sources = [0, 3, 7]
     pol = api.ExecutionPolicy(mode="distributed", max_sweeps=100_000)
     r = proc.sssp(sources=sources, policy=pol)
     assert r.values.shape == (len(sources), road.n)
-    assert r.extra["batched_fallback"] == "per-source sequential"
+    assert "batched_fallback" not in r.extra          # fallback retired
+    dist = r.extra["dist"]
+    assert dist.query_sweeps.shape == (len(sources),)
+    assert r.stats.sweeps == int(dist.query_sweeps.max())
     assert r.stats.mode == "distributed" and r.stats.converged
     oracle = proc.sssp(sources=sources,
                        policy=api.ExecutionPolicy(mode="sync",
                                                   max_sweeps=100_000))
-    np.testing.assert_allclose(r.values, oracle.values,
-                               rtol=1e-5, atol=1e-4)
+    # same engine math, same order of operations: bit-identical
+    np.testing.assert_array_equal(r.values, oracle.values)
+
+
+def test_batched_distributed_query_axis_0_escape_hatch(road, proc):
+    """query_axis=0 keeps the retired per-source sequential loop as an
+    explicit escape hatch, bit-identical to the 2-D dispatch."""
+    sources = [0, 3, 7]
+    pol = api.ExecutionPolicy(mode="distributed", max_sweeps=100_000,
+                              query_axis=0)
+    r = proc.sssp(sources=sources, policy=pol)
+    assert r.extra["batched_fallback"] == "per-source sequential"
+    batched = proc.sssp(sources=sources,
+                        policy=pol.but(query_axis=None))
+    np.testing.assert_array_equal(r.values, batched.values)
+    assert r.stats.sweeps == batched.stats.sweeps
+    with pytest.raises(ValueError, match="query_axis"):
+        api.ExecutionPolicy(query_axis=-1)
 
 
 def test_method_kwargs_merge_into_policy(proc):

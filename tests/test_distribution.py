@@ -1,5 +1,12 @@
 """Distribution: sharding rules, distributed graph engine (1 and 8 fake
-devices via subprocess), dry-run cell smoke."""
+devices via subprocess), the 2-D ("graph", "query") batched engine
+across mesh factorizations, dry-run cell smoke.
+
+The factorization parity tests run in-process when the host already has
+>= 8 devices (the CI multi-device lane sets
+XLA_FLAGS=--xla_force_host_platform_device_count=8 via DEVICES=8 in
+benchmarks/ci.sh) and fall back to one subprocess sweep on single-device
+hosts."""
 
 import json
 import os
@@ -7,6 +14,7 @@ import subprocess
 import sys
 from types import SimpleNamespace
 
+import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
@@ -75,11 +83,91 @@ def test_distributed_graph_engine_single_device():
     _ = jnp
 
 
+def test_make_graph_mesh_is_2d_and_degenerates():
+    from repro.core import placement as PL
+    mesh = PL.make_graph_mesh(1)
+    assert dict(mesh.shape) == {"graph": 1, "query": 1}
+    with pytest.raises(ValueError):
+        PL.make_graph_mesh(1, 0)
+    with pytest.raises(ValueError):
+        PL.make_graph_mesh(4, 3)   # 3 does not divide 4
+
+
+def test_factor_query_axis():
+    from repro.core import placement as PL
+    assert PL.factor_query_axis(8, 1) == 1
+    assert PL.factor_query_axis(8, 3) == 2    # largest divisor <= 3
+    assert PL.factor_query_axis(8, 5) == 4
+    assert PL.factor_query_axis(8, 64) == 8
+    assert PL.factor_query_axis(1, 64) == 1
+    assert PL.factor_query_axis(6, 4) == 3
+
+
+def test_batched_engine_rejects_query_axis_0():
+    """The query_axis=0 per-source escape hatch is the session API's —
+    the engine must refuse it rather than silently auto-factor."""
+    from repro.core import placement as PL
+    p, x0, _ = _batched_fixture("min_plus")
+    with pytest.raises(ValueError, match="query_axis"):
+        PL.distributed_sync_run_batched(p, x0, query_axis=0)
+
+
+def _batched_fixture(semiring):
+    """(Prepared, stacked x0, sync-batched reference) for one semiring."""
+    from repro.core import engine as eng
+    from repro.core import graph as G
+
+    g = G.rmat(200, 900, seed=6)
+    sources = [0, 5, 9, 13, 17]
+    p = eng.prepare(g, semiring, b=8, num_clusters=8)
+    if semiring == "max_min":
+        def x0f(s):
+            x = np.zeros(g.n, dtype=np.float32)
+            x[s] = 1.0
+            return np.asarray(p.to_blocks(x, 0.0))
+    else:
+        def x0f(s):
+            x = np.full(g.n, np.inf, dtype=np.float32)
+            x[s] = 0.0
+            return np.asarray(p.to_blocks(x, np.inf))
+    x0 = np.stack([x0f(s) for s in sources])
+    ref, _ = eng.run_sync_batched(p, x0, max_sweeps=100_000)
+    return p, x0, np.asarray(ref)
+
+
+# (num_devices, query_axis) — the factorizations the issue names
+FACTORIZATIONS = [(1, 1), (4, 2), (8, 1), (8, 8)]
+
+
+@pytest.mark.parametrize("semiring", ["min_plus", "max_min"])
+@pytest.mark.parametrize("ndev,qaxis", FACTORIZATIONS)
+def test_batched_distributed_parity_across_factorizations(
+        semiring, ndev, qaxis):
+    """Batched-distributed == run_sync_batched, BIT-identical, on every
+    mesh factorization (1×1, 2×2, 8×1, 1×8).  Needs the multi-device
+    lane's fake-device grid for the non-trivial meshes."""
+    if len(jax.devices()) < ndev:
+        pytest.skip(f"needs {ndev} devices (CI multi-device lane); "
+                    f"have {len(jax.devices())} — subprocess test "
+                    "covers this elsewhere")
+    from repro.core import placement as PL
+    p, x0, ref = _batched_fixture(semiring)
+    mesh = PL.make_graph_mesh(ndev, qaxis)
+    x, ds = PL.distributed_sync_run_batched(p, x0, "relax",
+                                            max_sweeps=100_000, mesh=mesh)
+    assert np.array_equal(np.asarray(x), ref)
+    assert ds.converged
+    assert ds.mesh_shape == (ndev // qaxis, qaxis)
+    assert ds.query_sweeps.shape == (x0.shape[0],)
+    assert ds.sweeps == int(ds.query_sweeps.max())
+
+
 _SUBPROCESS_8DEV = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
-from repro.core import algorithms as A, graph as G, oracles as O, placement as PL
+from repro.core import algorithms as A, engine as E, graph as G, \
+    oracles as O, placement as PL
 g = G.rmat(200, 900, seed=6)
 r = A.sssp(g, 0, mode="async", b=8, num_clusters=8)
 p = r.prepared
@@ -93,6 +181,25 @@ low = PL.lower_distributed(p, mesh)
 txt = low.compile().as_text()
 assert "all-gather" in txt or "all-reduce" in txt, "no collectives?"
 print("OK8")
+
+# 2-D batched engine: bit-identical to the vmap sync oracle on every
+# factorization of the 8 fake devices (1x1, 2x2, 8x1, 1x8)
+sources = [0, 5, 9, 13, 17]
+X0 = np.stack([np.asarray(p.to_blocks(
+    np.where(np.arange(g.n) == s, 0, np.inf).astype(np.float32),
+    np.inf)) for s in sources])
+ref, _ = E.run_sync_batched(p, X0, max_sweeps=100_000)
+ref = np.asarray(ref)
+for nd, qa in [(1, 1), (4, 2), (8, 1), (8, 8)]:
+    m2 = PL.make_graph_mesh(nd, qa)
+    xb, db = PL.distributed_sync_run_batched(
+        p, X0, "relax", max_sweeps=100_000, mesh=m2)
+    assert np.array_equal(np.asarray(xb), ref), (nd, qa)
+    assert db.converged and db.mesh_shape == (nd // qa, qa)
+low_b = PL.lower_distributed(p, PL.make_graph_mesh(8, 4), batch=len(sources))
+txt_b = low_b.compile().as_text()
+assert "all-gather" in txt_b or "all-reduce" in txt_b, "no collectives?"
+print("OK8-2D")
 """
 
 
@@ -102,7 +209,8 @@ def test_distributed_graph_engine_8_fake_devices():
                          capture_output=True, text=True, env=env,
                          cwd=os.path.dirname(os.path.dirname(
                              os.path.abspath(__file__))), timeout=600)
-    assert "OK8" in out.stdout, out.stderr[-2000:]
+    assert "OK8" in out.stdout and "OK8-2D" in out.stdout, \
+        out.stderr[-2000:]
 
 
 def test_dryrun_single_cell_subprocess():

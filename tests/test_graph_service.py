@@ -342,3 +342,28 @@ def test_service_shares_plans_across_graph_names(road):
     b = svc.register("b", road, b=16, num_clusters=8)
     assert a.prepare("min_plus") is b.prepare("min_plus")
     assert svc.store.stats()["puts"] == 1
+
+
+def test_gather_coalesces_distributed_policy_into_2d_batched_engine(road):
+    """A wave whose resolved policy is mode='distributed' runs as ONE
+    batched 2-D shard_map dispatch — not the retired per-source loop —
+    and each ticket surfaces the engine's mesh/per-query sweeps."""
+    dist = api.ExecutionPolicy(mode="distributed", max_sweeps=100_000)
+    svc = api.GraphService(policy=dist)
+    svc.register("roads", road, b=16, num_clusters=8)
+    sources = (0, 3, 7)
+    tickets = [svc.submit("roads", api.QuerySpec(algo="sssp",
+                                                 sources=(s,)))
+               for s in sources]
+    out = svc.gather()
+    for t, s in zip(tickets, sources):
+        r = out[t]
+        assert not isinstance(r, Exception), r
+        assert r.extra["coalesced"] == len(sources)
+        assert "batched_fallback" not in r.extra    # fallback retired
+        assert r.extra["dist"].query_sweeps.shape == (len(sources),)
+        solo = svc.run("roads", api.QuerySpec(algo="sssp", sources=(s,)))
+        np.testing.assert_array_equal(r.values, solo.values)
+    st = svc.stats()
+    assert st["batched_runs"] == 1                  # one dispatch total
+    assert st["coalesced_queries"] == len(sources)

@@ -45,3 +45,41 @@ def test_empty_baseline_skips_gate():
 def test_new_entries_in_fresh_are_tolerated():
     fresh = {**BASE, ("lj", "cc"): 30.0}             # new algo added
     assert trend_check.compare(_snap(BASE), _snap(fresh), 0.25) == 0
+
+
+# -- sweep-family handling (fig5 × distributed_batched) -------------------
+
+DIST = [{"graph": "ca", "algo": "sssp", "speedup_vs_sequential": 3.0},
+        {"graph": "fb", "algo": "sssp", "speedup_vs_sequential": 2.8}]
+
+
+def test_family_only_in_fresh_skips_with_warning(capsys):
+    fresh = {**_snap(BASE), "distributed_batched": DIST}
+    # baseline predates the family: it must not fail the gate
+    assert trend_check.compare(_snap(BASE), fresh, 0.25) == 0
+    assert "present only in the fresh" in capsys.readouterr().out
+
+
+def test_family_only_in_baseline_skips_with_warning(capsys):
+    base = {**_snap(BASE), "distributed_batched": DIST}
+    # a lane that skipped the family must not fail the gate
+    assert trend_check.compare(base, _snap(BASE), 0.25) == 0
+    assert "present only in the baseline" in capsys.readouterr().out
+
+
+def test_family_in_both_is_gated():
+    base = {**_snap(BASE), "distributed_batched": DIST}
+    regressed = [dict(r, speedup_vs_sequential=1.0) for r in DIST]
+    fresh = {**_snap(BASE), "distributed_batched": regressed}
+    assert trend_check.compare(base, fresh, 0.25) == 1
+    assert trend_check.compare(base, base, 0.25) == 0
+
+
+def test_family_regression_does_not_hide_behind_fig5():
+    # fig5 healthy, distributed_batched collapsed: families gate
+    # independently — a healthy family must not average away a broken one
+    base = {**_snap(BASE), "distributed_batched": DIST}
+    fresh = {**_snap({k: v * 2 for k, v in BASE.items()}),
+             "distributed_batched": [
+                 dict(r, speedup_vs_sequential=0.1) for r in DIST]}
+    assert trend_check.compare(base, fresh, 0.25) == 1
