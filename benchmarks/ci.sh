@@ -19,9 +19,11 @@ if [ "$DEVICES" -gt 1 ]; then
     echo "== multi-device lane: distributed engines on ${DEVICES} fake host devices =="
     # distribution suite (2-D mesh parity across factorizations runs
     # in-process here) + the session-API suite (batched distributed
-    # dispatch through GraphProcessor/ExecutionPolicy)
-    python -m pytest -x -q tests/test_distribution.py tests/test_api.py
-    echo "== batched distributed sweep family (${DEVICES} devices) =="
+    # dispatch through GraphProcessor/ExecutionPolicy) + the
+    # continuous-batching server (wave scheduler over a real device grid)
+    python -m pytest -x -q tests/test_distribution.py tests/test_api.py \
+        tests/test_graph_server.py
+    echo "== batched distributed + serve sweep families (${DEVICES} devices) =="
     python -m benchmarks.run --scale 0.002 --json BENCH_multidev.json \
         --skip fig5 fig6 avs kernel lm
     echo "CI OK (multi-device, DEVICES=${DEVICES})"
@@ -34,10 +36,13 @@ python -m pytest -x -q
 echo "== quickstart smoke (CPU) =="
 python examples/quickstart.py
 
-echo "== bench trend vs committed BENCH_graph.json =="
+echo "== bench trend vs committed BENCH_graph.json (incl. serve load-test smoke) =="
 # re-run the modeled benchmarks at the committed snapshot's scale and
 # gate on >25% modeled-speedup regression (also reports the plan-store
-# hit rate for the run)
+# per-tier hit rates for the run).  The run includes the serve_latency
+# load-test smoke: concurrent clients against a GraphServer, emitting
+# p50/p99 + achieved wave size, with the modeled batching speedup
+# protected by the trend gate below.
 SCALE=$(python -c "import json; \
     print(json.load(open('BENCH_graph.json'))['meta']['scale'])")
 python -m benchmarks.run --scale "$SCALE" --json BENCH_ci.json \

@@ -50,12 +50,19 @@ def load_graphs(scale: float = SCALE):
             for name in GRAPH_NAMES}
 
 
+def register_name(g, b: int = 16, num_clusters: int = 64) -> str:
+    """Canonical service-registry name for a (graph, tiling) session —
+    shared so the serving benchmarks can submit against the same
+    registration ``processor()`` created."""
+    return f"{g.fingerprint()[:12]}/b{b}c{num_clusters}"
+
+
 def processor(g, b: int = 16,
               num_clusters: int = 64) -> api.GraphProcessor:
     """One registered session per (graph, tiling); registration is
     idempotent, so repeat calls return the same processor."""
-    name = f"{g.fingerprint()[:12]}/b{b}c{num_clusters}"
-    return service().register(name, g, b=b, num_clusters=num_clusters)
+    return service().register(register_name(g, b, num_clusters), g, b=b,
+                              num_clusters=num_clusters)
 
 
 def run_algo(g, algo: str, mode: str, b: int = 16, num_clusters: int = 64):

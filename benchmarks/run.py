@@ -21,7 +21,7 @@ import json
 import numpy as np
 
 from . import async_vs_sync, common, dist_batched, fig5_cycles, \
-    fig6_power, kernel_bench, lm_bench
+    fig6_power, kernel_bench, lm_bench, serve_latency
 
 
 def main() -> None:
@@ -34,7 +34,7 @@ def main() -> None:
                          "('' disables)")
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["fig5", "fig6", "avs", "dist", "kernel",
-                             "lm"])
+                             "lm", "serve"])
     args = ap.parse_args()
 
     graphs = common.load_graphs(args.scale)
@@ -53,6 +53,8 @@ def main() -> None:
         out["async_vs_sync"] = async_vs_sync.run(graphs)
     if "dist" not in args.skip:
         out["distributed_batched"] = dist_batched.run(graphs)
+    if "serve" not in args.skip:
+        out["serve_latency"] = serve_latency.run(graphs)
     if "kernel" not in args.skip:
         out["kernel"] = kernel_bench.run(graphs)
     if "lm" not in args.skip:
@@ -85,15 +87,24 @@ def main() -> None:
         print(f"batched distributed dispatch (modeled, "
               f"{dist_batched.REF_DEVICES}-device node): geomean "
               f"{np.exp(np.log(ds).mean()):.2f}x vs per-source loop")
+    if "serve_latency" in out:
+        sl = out["serve_latency"]
+        sp = np.array([r["speedup_vs_unbatched"] for r in sl])
+        aw = np.mean([r["achieved_wave"] for r in sl])
+        p99 = max(r["p99_ms"] for r in sl)
+        print(f"continuous-batching front door: geomean modeled "
+              f"{np.exp(np.log(sp).mean()):.2f}x vs unbatched dispatch "
+              f"(achieved wave {aw:.1f}, worst p99 {p99:.1f} ms)")
 
     # --- serving-layer accounting --------------------------------------
     store = common.service().store.stats()
     out["plan_store"] = store
     print(f"plan store: {store['plans']} plans "
           f"({store['bytes'] / 1e6:.2f} MB), hit rate "
-          f"{store['hit_rate']:.1%} "
-          f"({store['mem_hits']} mem + {store['disk_hits']} disk hits, "
-          f"{store['misses']} builds)")
+          f"{store['hit_rate']:.1%} = {store['mem_hit_rate']:.1%} mem "
+          f"+ {store['disk_hit_rate']:.1%} disk "
+          f"({store['mem_hits']} mem hits, {store['disk_hits']} disk "
+          f"hits, {store['misses']} builds)")
 
     if args.json:
         with open(args.json, "w") as f:

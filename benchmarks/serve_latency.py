@@ -1,0 +1,120 @@
+"""``serve_latency`` sweep family: the continuous-batching front door
+under concurrent clients — request latency (p50/p99), achieved wave
+batch size, and a MODELED batching speedup the trend gate protects.
+
+Client threads submit single-source SSSP/BFS requests into a paused
+``GraphServer`` (so the wave composition — hence everything the gate
+reads — is deterministic); starting the scheduler then closes full
+``max_wave``-sized waves.  Wall-clock p50/p99 (submit → future done)
+and the achieved wave size are reported for operators; the *gated*
+number is modeled exactly like ``dist_batched``: per-request NALE
+critical paths from the measured solo sweep counts executed
+back-to-back (unbatched front door) vs straggler-bound waves (what the
+scheduler dispatched), which depends only on engine work counters.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import power as PW
+
+from . import common
+
+QUERIES = 8        # requests per (graph, algo) load burst
+CLIENTS = 4        # submitting threads
+MAX_WAVE = 4       # scheduler wave size → QUERIES/MAX_WAVE full waves
+
+
+def _burst(server, name, algo, sources):
+    """Submit QUERIES requests from CLIENTS threads; returns
+    ({src: future}, {src: t_submit}, {src: t_done})."""
+    futs, t_sub, t_done = {}, {}, {}
+    lock = threading.Lock()
+    barrier = threading.Barrier(CLIENTS)
+
+    def client(chunk):
+        barrier.wait()
+        for s in chunk:
+            t0 = time.perf_counter()
+            f = server.submit(name, api.QuerySpec(algo=algo,
+                                                  sources=(s,)))
+            f.add_done_callback(
+                lambda _f, s=s: t_done.__setitem__(
+                    s, time.perf_counter()))
+            with lock:
+                futs[s], t_sub[s] = f, t0
+
+    threads = [threading.Thread(target=client, args=(sources[i::CLIENTS],))
+               for i in range(CLIENTS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return futs, t_sub, t_done
+
+
+def run(graphs=None, emit=common.csv_line):
+    graphs = graphs or common.load_graphs()
+    svc = common.service()
+    rows = []
+    for gname, g in graphs.items():
+        name = common.register_name(g)
+        common.processor(g)   # ensure registered (idempotent)
+        sources = [int(s) for s in
+                   np.linspace(0, g.n - 1, QUERIES, dtype=np.int64)]
+        for algo in ("sssp", "bfs"):
+            # solo runs first: the bit-identity reference AND the
+            # per-request sweep counts the sequential model needs
+            solo = {s: svc.run(name, api.QuerySpec(algo=algo,
+                                                   sources=(s,)))
+                    for s in sources}
+            server = api.GraphServer(
+                service=svc, autostart=False,
+                wave=api.WavePolicy(max_wave=MAX_WAVE, max_wait_s=0.5))
+            futs, t_sub, t_done = _burst(server, name, algo, sources)
+            server.start()
+            results = {s: f.result(timeout=600)
+                       for s, f in futs.items()}
+            sched = server.stats()["scheduler"]
+            server.close()
+            for s in sources:   # serving must never change answers
+                if not np.array_equal(results[s].values,
+                                      solo[s].values):
+                    raise AssertionError(
+                        f"wave result diverged from direct run "
+                        f"({gname}/{algo} src={s})")
+            lat = np.array([t_done[s] - t_sub[s] for s in sources])
+            p50, p99 = np.percentile(lat, [50, 99])
+            # modeled: Q solo dispatches back-to-back vs straggler-
+            # bound waves of MAX_WAVE.  The reference wave composition
+            # is source-order chunks — NOT whatever the threads' race
+            # produced — so the number depends only on engine work
+            # counters (deterministic for a scale/seed), like
+            # dist_batched's reference node
+            p = results[sources[0]].prepared
+            times = [PW.model_nale(p, solo[s].stats).time_s
+                     for s in sources]
+            seq_s = sum(times)
+            bat_s = sum(max(times[i:i + MAX_WAVE])
+                        for i in range(0, len(times), MAX_WAVE))
+            speedup = seq_s / max(bat_s, 1e-12)
+            emit(f"serve/{gname}/{algo}", p50 * 1e6,
+                 f"Q={QUERIES} clients={CLIENTS} "
+                 f"waves={sched['waves']} "
+                 f"wave={sched['achieved_wave']:.1f} "
+                 f"p99_ms={p99 * 1e3:.1f} "
+                 f"modeled_speedup={speedup:.2f}x")
+            rows.append(dict(
+                graph=gname, algo=algo, queries=QUERIES,
+                clients=CLIENTS, max_wave=MAX_WAVE,
+                waves=int(sched["waves"]),
+                achieved_wave=float(sched["achieved_wave"]),
+                expired=int(sched["expired"]),
+                p50_ms=float(p50 * 1e3), p99_ms=float(p99 * 1e3),
+                speedup_vs_unbatched=float(speedup)))
+    return rows

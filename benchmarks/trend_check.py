@@ -39,10 +39,20 @@ def _dist_batched_speedups(snapshot: dict) -> dict:
             if r.get("speedup_vs_sequential") is not None}
 
 
+def _serve_latency_speedups(snapshot: dict) -> dict:
+    # the family's wall p50/p99 are operator info (host-dependent); the
+    # gated number is the modeled batching speedup, which depends only
+    # on engine work counters and the reference wave composition
+    return {(r["graph"], r["algo"]): float(r["speedup_vs_unbatched"])
+            for r in snapshot.get("serve_latency", [])
+            if r.get("speedup_vs_unbatched") is not None}
+
+
 # family name -> extractor of {entry_key: modeled_speedup}
 FAMILIES = {
     "fig5": _fig5_speedups,
     "distributed_batched": _dist_batched_speedups,
+    "serve_latency": _serve_latency_speedups,
 }
 
 
@@ -100,8 +110,13 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> int:
         return rc
     store = fresh.get("plan_store")
     if store:
-        print(f"trend: plan-store hit rate {store['hit_rate']:.1%} "
-              f"({store['plans']} plans, {store['misses']} builds)")
+        tiers = ""
+        if "mem_hit_rate" in store:   # older snapshots lack the split
+            tiers = (f" = {store['mem_hit_rate']:.1%} mem "
+                     f"+ {store['disk_hit_rate']:.1%} disk")
+        print(f"trend: plan-store hit rate {store['hit_rate']:.1%}"
+              f"{tiers} ({store['plans']} plans, {store['misses']} "
+              "builds)")
     if rc == 0:
         print("trend: OK")
     return rc

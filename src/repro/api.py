@@ -19,6 +19,19 @@ single-source queries into batched runs:
     svc.register("roads", g, b=16, num_clusters=64)
     t = svc.submit("roads", api.QuerySpec(algo="sssp", sources=(0,)))
     dist = svc.gather()[t].values
+
+Serving many *clients* (see ``serve/server.py``): a ``GraphServer``
+accepts concurrent ``submit(...) → Future`` requests and a background
+wave scheduler closes batched waves across clients (continuous
+batching), with per-request deadlines, ``Backpressure`` admission
+control, and background plan warming from the store's access log:
+
+    server = api.GraphServer(cache_dir=".plan-cache")
+    server.register("roads", g, b=16, num_clusters=64)
+    fut = server.submit("roads",
+                        api.QuerySpec(algo="sssp", sources=(0,)),
+                        deadline=0.5)
+    dist = fut.result().values
 """
 
 from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
@@ -26,7 +39,12 @@ from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
 from .core.engine import (Prepared, RunStats,  # noqa: F401
                           deserialize_prepared, serialize_prepared)
 from .serve.graph import GraphService, PlanStore  # noqa: F401
+from .serve.sched import (Backpressure, DeadlineExceeded,  # noqa: F401
+                          WavePolicy, WaveScheduler)
+from .serve.server import GraphServer  # noqa: F401
 
 __all__ = ["ExecutionPolicy", "GraphProcessor", "GraphService", "PlanKey",
            "PlanStore", "QuerySpec", "Result", "Prepared", "RunStats",
-           "serialize_prepared", "deserialize_prepared"]
+           "serialize_prepared", "deserialize_prepared", "GraphServer",
+           "WaveScheduler", "WavePolicy", "DeadlineExceeded",
+           "Backpressure"]

@@ -1,6 +1,11 @@
 from .graph import GraphService, PlanStore  # noqa: F401
+from .sched import (Backpressure, DeadlineExceeded,  # noqa: F401
+                    WavePolicy, WaveScheduler)
+from .server import GraphServer  # noqa: F401
 
-__all__ = ["ServeLoop", "generate", "GraphService", "PlanStore"]
+__all__ = ["ServeLoop", "generate", "GraphService", "PlanStore",
+           "GraphServer", "WaveScheduler", "WavePolicy",
+           "DeadlineExceeded", "Backpressure"]
 
 
 def __getattr__(name):

@@ -33,8 +33,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import json
 import os
 import threading
+import time
 import zipfile
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -53,6 +55,21 @@ COALESCIBLE = ("sssp", "bfs")
 def _plan_filename(fingerprint: str, key: PlanKey) -> str:
     kd = hashlib.blake2b(repr(key).encode(), digest_size=12).hexdigest()
     return f"{fingerprint}-{kd}.plan.npz"
+
+
+# the plan access log lives beside the serialized plans; it is what lets
+# a restarted server *warm* a graph's hot plans at register() time
+# instead of on the first unlucky request (serve.server.GraphServer)
+ACCESS_LOG = "plan_access.json"
+_ACCESS_FLUSH_S = 1.0   # throttle: at most one log write per second
+
+
+def _key_to_json(key: PlanKey) -> dict:
+    return dataclasses.asdict(key)
+
+
+def _key_from_json(d: dict) -> PlanKey:
+    return PlanKey(**d)
 
 
 class PlanStore:
@@ -79,10 +96,19 @@ class PlanStore:
         self._lock = threading.RLock()
         self._stats = dict(mem_hits=0, disk_hits=0, misses=0, puts=0,
                            evictions=0, disk_errors=0)
+        # plan access counts (fingerprint → key → lookups), persisted
+        # beside the on-disk plan tier so the next process knows which
+        # plans are hot before it has served a single query
+        self._access: Dict[str, Dict[PlanKey, int]] = {}
+        self._access_dirty = False
+        self._access_flushed = 0.0
+        if self.cache_dir:
+            self._load_access_log()
 
     # -- lookup ----------------------------------------------------------
 
     def get(self, fingerprint: str, key: PlanKey) -> Optional[Prepared]:
+        self._record_access(fingerprint, key)
         with self._lock:
             ent = self._mem.get((fingerprint, key))
             if ent is not None:
@@ -170,6 +196,67 @@ class PlanStore:
                 pass
             return None
 
+    # -- plan access log (feeds serve.server plan warming) ---------------
+
+    def _record_access(self, fingerprint: str, key: PlanKey) -> None:
+        if not self.cache_dir:
+            return   # no disk tier → nowhere to persist, nothing to warm
+        with self._lock:
+            per = self._access.setdefault(fingerprint, {})
+            per[key] = per.get(key, 0) + 1
+            self._access_dirty = True
+            due = time.monotonic() - self._access_flushed >= _ACCESS_FLUSH_S
+        if due:
+            self.flush_access_log()
+
+    def hot_keys(self, fingerprint: str,
+                 limit: Optional[int] = None) -> List[PlanKey]:
+        """A graph's plans, most-requested first — what ``register()``
+        should speculatively prepare before traffic arrives."""
+        with self._lock:
+            per = sorted(self._access.get(fingerprint, {}).items(),
+                         key=lambda kv: (-kv[1], repr(kv[0])))
+        keys = [k for k, _ in per]
+        return keys[:limit] if limit is not None else keys
+
+    def flush_access_log(self) -> None:
+        """Persist access counts (best-effort, atomic, throttled by the
+        callers; explicit so servers can flush on close)."""
+        if not self.cache_dir:
+            return
+        with self._lock:
+            if not self._access_dirty:
+                return
+            doc = {"version": 1,
+                   "graphs": {fp: [[_key_to_json(k), c]
+                                   for k, c in per.items()]
+                              for fp, per in self._access.items()}}
+            self._access_dirty = False
+            self._access_flushed = time.monotonic()
+        path = os.path.join(self.cache_dir, ACCESS_LOG)
+        try:
+            tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
+            os.replace(tmp, path)
+        except OSError:
+            with self._lock:
+                self._stats["disk_errors"] += 1
+
+    def _load_access_log(self) -> None:
+        path = os.path.join(self.cache_dir, ACCESS_LOG)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if doc.get("version") != 1:
+                return
+            self._access = {
+                fp: {_key_from_json(kd): int(c) for kd, c in per}
+                for fp, per in doc.get("graphs", {}).items()}
+        except (OSError, ValueError, TypeError, KeyError):
+            # a corrupt log only costs warming, never correctness
+            self._access = {}
+
     # -- introspection ---------------------------------------------------
 
     def keys(self) -> List[Tuple[str, PlanKey]]:
@@ -185,8 +272,13 @@ class PlanStore:
             s = dict(self._stats, plans=len(self._mem),
                      bytes=self._bytes, max_bytes=self.max_bytes)
             lookups = s["mem_hits"] + s["disk_hits"] + s["misses"]
-            s["hit_rate"] = (s["mem_hits"] + s["disk_hits"]) / lookups \
-                if lookups else 0.0
+            # per-tier rates: a memory hit is free, a disk hit still
+            # pays a deserialize — capacity tuning needs to see both
+            s["mem_hit_rate"] = s["mem_hits"] / lookups if lookups \
+                else 0.0
+            s["disk_hit_rate"] = s["disk_hits"] / lookups if lookups \
+                else 0.0
+            s["hit_rate"] = s["mem_hit_rate"] + s["disk_hit_rate"]
             return s
 
 
@@ -296,15 +388,34 @@ class GraphService:
 
     # -- coalescing front door -------------------------------------------
 
+    def wave_key(self, name: str, spec: QuerySpec) -> Optional[tuple]:
+        """Validate a request and resolve its coalescing key.
+
+        Raises ``KeyError`` for unregistered names and ``ValueError``/
+        ``TypeError`` for specs that can never execute — at *submit*
+        time, so a bad request cannot poison the batch it would have
+        ridden in.  Returns ``(name, algo, resolved_policy)`` when the
+        request can share a batched wave (single-source SSSP/BFS — same
+        key ⇒ same plan ⇒ same wave), else ``None`` (run individually).
+        Shared by ``submit``/``gather`` and the background scheduler
+        (``serve.sched.WaveScheduler``) so both front doors group
+        requests exactly as ``run`` would execute them.
+        """
+        proc = self.get(name)  # fail fast on unknown graphs
+        validate_spec(spec)
+        pol = proc.resolve_policy(spec)  # surfaces bad params/fields
+        if (spec.algo in COALESCIBLE and not spec.batched
+                and len(spec.sources) == 1):
+            return (name, spec.algo, pol)
+        return None
+
     def submit(self, name: str, spec: QuerySpec) -> int:
         """Enqueue one query; returns a ticket for ``gather``.
 
         Invalid requests are rejected here, not at ``gather`` — a bad
         spec must not poison the batch it would have ridden in.
         """
-        proc = self.get(name)  # fail fast on unknown graphs
-        validate_spec(spec)
-        proc.resolve_policy(spec)  # surfaces bad params/policy fields
+        self.wave_key(name, spec)
         with self._lock:
             t = self._next_ticket
             self._next_ticket += 1
@@ -347,55 +458,72 @@ class GraphService:
         waves: Dict[tuple, List[_Pending]] = collections.OrderedDict()
         for q in pending:
             try:
-                proc = self.get(q.name)  # may race a concurrent evict()
-            except KeyError as e:
+                key = self.wave_key(q.name, q.spec)
+            except Exception as e:  # may race a concurrent evict()
                 results[q.ticket] = e
                 continue
-            if (q.spec.algo in COALESCIBLE and not q.spec.batched
-                    and len(q.spec.sources) == 1):
-                key = (q.name, q.spec.algo, proc.resolve_policy(q.spec))
+            if key is not None:
                 waves.setdefault(key, []).append(q)
             else:
                 try:
-                    results[q.ticket] = proc.run(q.spec)
+                    results[q.ticket] = self.get(q.name).run(q.spec)
                 except Exception as e:  # keep serving the rest
                     results[q.ticket] = e
         for (name, algo, pol), group in waves.items():
+            results.update(self._run_wave(name, algo, pol, group))
+        return results
+
+    def _run_wave(self, name: str, algo: str, pol: ExecutionPolicy,
+                  group: List[_Pending]
+                  ) -> Dict[int, Union[Result, Exception]]:
+        """Execute one coalescible group (same ``wave_key``) and map
+        every ticket to its Result or Exception.
+
+        Chunks the group into waves of at most ``max_wave`` sources and
+        runs each as ONE batched dispatch, slicing per-ticket rows out —
+        the engine-facing half of ``gather``, factored out so the
+        background continuous-batching scheduler
+        (``serve.sched.WaveScheduler``) shares the exact same execution
+        path.  Thread-safe: plan lookups go through the locked
+        ``PlanStore``, engine dispatch holds no service state, and the
+        wave counters take ``_lock`` — concurrent callers (a ``gather``
+        racing the scheduler thread) at worst build a plan twice, never
+        corrupt one.
+        """
+        results: Dict[int, Union[Result, Exception]] = {}
+        try:
+            proc = self.get(name)
+        except KeyError as e:  # evicted while the group waited
+            return {q.ticket: e for q in group}
+        for i in range(0, len(group), self.max_wave):
+            wave = group[i:i + self.max_wave]
             try:
-                proc = self.get(name)
-            except KeyError as e:
-                for q in group:
+                if len(wave) == 1:
+                    q = wave[0]
+                    results[q.ticket] = proc.run(q.spec)
+                    continue
+                sources = tuple(q.spec.sources[0] for q in wave)
+                batch = proc.run(QuerySpec(algo=algo, sources=sources,
+                                           batched=True, policy=pol))
+            except Exception as e:
+                for q in wave:
                     results[q.ticket] = e
                 continue
-            for i in range(0, len(group), self.max_wave):
-                wave = group[i:i + self.max_wave]
-                try:
-                    if len(wave) == 1:
-                        q = wave[0]
-                        results[q.ticket] = proc.run(q.spec)
-                        continue
-                    sources = tuple(q.spec.sources[0] for q in wave)
-                    batch = proc.run(QuerySpec(algo=algo, sources=sources,
-                                               batched=True, policy=pol))
-                except Exception as e:
-                    for q in wave:
-                        results[q.ticket] = e
-                    continue
-                with self._lock:
-                    self._coalesced_queries += len(wave)
-                    self._batched_runs += 1
-                for row, q in enumerate(wave):
-                    extra = {"algo": algo, "src": sources[row],
-                             "coalesced": len(wave)}
-                    for k in ("dist", "batched_fallback"):
-                        # distributed waves: surface the engine's mesh
-                        # factorization / per-query sweeps per ticket
-                        if k in batch.extra:
-                            extra[k] = batch.extra[k]
-                    results[q.ticket] = Result(
-                        np.asarray(batch.values[row]), batch.stats,
-                        batch.prepared, extra, policy=pol,
-                        graph=proc.g)
+            with self._lock:
+                self._coalesced_queries += len(wave)
+                self._batched_runs += 1
+            for row, q in enumerate(wave):
+                extra = {"algo": algo, "src": sources[row],
+                         "coalesced": len(wave)}
+                for k in ("dist", "batched_fallback"):
+                    # distributed waves: surface the engine's mesh
+                    # factorization / per-query sweeps per ticket
+                    if k in batch.extra:
+                        extra[k] = batch.extra[k]
+                results[q.ticket] = Result(
+                    np.asarray(batch.values[row]), batch.stats,
+                    batch.prepared, extra, policy=pol,
+                    graph=proc.g)
         return results
 
     # -- introspection ---------------------------------------------------

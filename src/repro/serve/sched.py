@@ -1,0 +1,375 @@
+"""Wave scheduler — continuous batching for the graph front door.
+
+The paper's asynchronous thesis applied to *serving*: a self-timed
+element fires when its inputs are ready, not on a global clock.
+``GraphService.gather`` is the bulk-synchronous version of batching —
+only requests one caller queued before its barrier share a wave.
+``WaveScheduler`` is the self-timed version: a background thread watches
+the request stream from *all* clients, groups requests that resolve to
+the same plan (``GraphService.wave_key``), and closes a wave the moment
+it is worth dispatching — when a group reaches ``max_wave`` sources, or
+when its oldest request has waited ``max_wait_s`` (the classic
+continuous-batching policy of LLM serving engines; ``serve.engine.
+ServeLoop`` plays the same game with decode slots).
+
+Execution goes through ``GraphService._run_wave`` — the exact code path
+``gather`` uses — so scheduled results are bit-identical to direct
+``GraphService.run`` calls.  Requests carry an optional *deadline*; a
+request that expires while queued resolves to ``DeadlineExceeded``
+instead of occupying a row in a wave somebody else is waiting on.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple
+
+from ..core.api import QuerySpec
+from .graph import GraphService, _Pending
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's deadline passed before a wave could serve it."""
+
+
+class Backpressure(RuntimeError):
+    """Admission control rejected a submit; ``stats`` says why (queue
+    depth, plan-store thrash) so clients can back off intelligently."""
+
+    def __init__(self, msg: str, stats: Optional[dict] = None):
+        super().__init__(msg)
+        self.stats = stats or {}
+
+
+@dataclasses.dataclass(frozen=True)
+class WavePolicy:
+    """Scheduler knobs (one frozen object, like ``ExecutionPolicy``).
+
+    max_wave:    close a wave as soon as a plan-group holds this many
+                 requests (rides on top of ``GraphService.max_wave``,
+                 which re-chunks oversized groups defensively).
+    max_wait_s:  close a wave when its oldest request has waited this
+                 long, full or not — the latency half of the
+                 continuous-batching trade.
+    max_pending: admission control — submits beyond this many queued
+                 requests are rejected with ``Backpressure``.
+    workers:     dispatch threads.  1 (default) serializes waves (plan
+                 builds never race); >1 lets waves for different plans
+                 overlap.
+    thrash_evictions / thrash_window_s:  reject submits while the shared
+                 ``PlanStore`` evicted ≥ this many plans inside the
+                 window — batching on top of a store that is re-building
+                 plans per query only amplifies the thrash.
+    """
+
+    max_wave: int = 64
+    max_wait_s: float = 0.005
+    max_pending: int = 1024
+    workers: int = 1
+    thrash_evictions: int = 64
+    thrash_window_s: float = 1.0
+
+    def __post_init__(self):
+        if self.max_wave < 1:
+            raise ValueError(f"max_wave must be >= 1: {self.max_wave!r}")
+        if self.max_wait_s < 0:
+            raise ValueError(
+                f"max_wait_s must be >= 0: {self.max_wait_s!r}")
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1: {self.workers!r}")
+
+    def but(self, **kw) -> "WavePolicy":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class _Request:
+    """One in-flight submit: a ``_Pending`` plus its future/deadline."""
+
+    ticket: int
+    name: str
+    spec: QuerySpec
+    key: Optional[tuple]            # GraphService.wave_key, None=solo
+    future: Future
+    t_submit: float                 # monotonic
+    t_deadline: Optional[float]     # monotonic, None = no deadline
+
+
+class WaveScheduler:
+    """Background continuous-batching loop over a ``GraphService``.
+
+    ``offer`` enqueues requests (thread-safe, any number of client
+    threads); the scheduler thread closes waves per ``WavePolicy`` and
+    dispatches them through ``GraphService._run_wave`` on a small worker
+    pool, resolving each request's ``Future``.  Not started until
+    ``start()`` — a paused scheduler just accumulates requests, which is
+    also what makes batching deterministic for tests and benchmarks.
+    """
+
+    def __init__(self, service: GraphService, policy: WavePolicy):
+        self.service = service
+        self.policy = policy
+        self._cv = threading.Condition()
+        self._groups: "collections.OrderedDict[tuple, " \
+            "collections.deque[_Request]]" = collections.OrderedDict()
+        self._singles: "collections.deque[_Request]" = collections.deque()
+        self._pending = 0
+        self._inflight = 0
+        self._running = False
+        self._thread: Optional[threading.Thread] = None
+        self._pool = ThreadPoolExecutor(max_workers=policy.workers,
+                                        thread_name_prefix="repro-wave")
+        self._stats = dict(waves=0, wave_queries=0, coalesced_waves=0,
+                           max_wave=0, expired=0, completed=0, failed=0)
+
+    # -- client side -----------------------------------------------------
+
+    def offer(self, req: _Request) -> None:
+        with self._cv:
+            if req.key is not None:
+                self._groups.setdefault(
+                    req.key, collections.deque()).append(req)
+            else:
+                self._singles.append(req)
+            self._pending += 1
+            self._cv.notify_all()
+
+    def pending(self) -> int:
+        with self._cv:
+            return self._pending
+
+    def evict(self, name: str) -> int:
+        """Resolve every queued request for ``name`` with ``KeyError``
+        (mirrors ``GraphService.evict``'s promise that pending tickets
+        are never silently dropped).  Returns how many were resolved."""
+        err = KeyError(f"graph {name!r} was evicted before the query "
+                       "ran")
+        with self._cv:
+            victims: List[_Request] = []
+            for key in list(self._groups):
+                dq = self._groups[key]
+                keep = collections.deque(
+                    r for r in dq if r.name != name)
+                victims += [r for r in dq if r.name == name]
+                if keep:
+                    self._groups[key] = keep
+                else:
+                    del self._groups[key]
+            keep = collections.deque(
+                r for r in self._singles if r.name != name)
+            victims += [r for r in self._singles if r.name == name]
+            self._singles = keep
+            self._pending -= len(victims)
+            self._cv.notify_all()
+        for r in victims:
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_exception(err)
+        return len(victims)
+
+    # -- lifecycle -------------------------------------------------------
+
+    def start(self) -> None:
+        with self._cv:
+            if self._running:
+                return
+            self._running = True
+            self._thread = threading.Thread(target=self._loop,
+                                            name="repro-wave-sched",
+                                            daemon=True)
+            self._thread.start()
+
+    def stop(self, drain: bool = True, timeout: Optional[float] = None
+             ) -> None:
+        """Stop the loop.  ``drain=True`` (default) dispatches every
+        queued request first — full wave or not; ``drain=False`` fails
+        the queue with ``Backpressure`` (a shutting-down server is the
+        ultimate admission refusal)."""
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join(timeout)
+        if drain:
+            for key, wave in self._close_waves(force=True):
+                self._dispatch(key, wave)
+        else:
+            err = Backpressure("scheduler stopped", self.stats())
+            for _, wave in self._close_waves(force=True):
+                for r in wave:
+                    if r.future.set_running_or_notify_cancel():
+                        r.future.set_exception(err)
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+        self._pool.shutdown(wait=True)
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue AND in-flight waves are empty (or
+        ``timeout``); True if fully drained."""
+        end = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._pending or self._inflight:
+                left = None if end is None else end - time.monotonic()
+                if left is not None and left <= 0:
+                    return False
+                self._cv.wait(timeout=left)
+        return True
+
+    # -- the scheduling loop ---------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                if not self._running:
+                    return   # stop() owns the final flush
+                now = time.monotonic()
+                due = self._next_event()
+                if due is None or due > now:
+                    wait = None if due is None else max(due - now, 1e-4)
+                    self._cv.wait(timeout=wait)
+                    if not self._running:
+                        return
+            for key, wave in self._close_waves(force=False):
+                self._pool.submit(self._dispatch, key, wave)
+
+    def _next_event(self) -> Optional[float]:
+        """Earliest moment anything becomes actionable (caller holds
+        ``_cv``): a single to run, a group's max-wait expiry, a full
+        group (already due), or a request deadline."""
+        now = time.monotonic()
+        due: Optional[float] = None
+
+        def upd(t: float):
+            nonlocal due
+            due = t if due is None else min(due, t)
+
+        if self._singles:
+            upd(now)
+        for dq in self._groups.values():
+            if len(dq) >= self.policy.max_wave:
+                upd(now)
+            elif dq:
+                upd(dq[0].t_submit + self.policy.max_wait_s)
+        for dq in list(self._groups.values()) + [self._singles]:
+            for r in dq:
+                if r.t_deadline is not None:
+                    upd(r.t_deadline)
+        return due
+
+    def _close_waves(self, force: bool
+                     ) -> List[Tuple[Optional[tuple], List[_Request]]]:
+        """Pop every wave that is ready (full / waited out / forced),
+        expiring dead-on-arrival requests first so they never occupy a
+        row.  Returns [(wave_key or None, requests)]."""
+        expired: List[_Request] = []
+        todo: List[Tuple[Optional[tuple], List[_Request]]] = []
+        now = time.monotonic()
+        with self._cv:
+            self._expire(self._singles, now, expired)
+            if self._singles:
+                wave = list(self._singles)
+                self._singles.clear()
+                self._pending -= len(wave)
+                self._inflight += 1
+                todo.append((None, wave))
+            for key in list(self._groups):
+                dq = self._groups[key]
+                self._expire(dq, now, expired)
+                while dq and (force or len(dq) >= self.policy.max_wave
+                              or now - dq[0].t_submit
+                              >= self.policy.max_wait_s):
+                    wave = [dq.popleft() for _ in
+                            range(min(len(dq), self.policy.max_wave))]
+                    self._pending -= len(wave)
+                    self._inflight += 1
+                    todo.append((key, wave))
+                if not dq:
+                    del self._groups[key]
+            self._stats["expired"] += len(expired)
+            if expired:
+                self._cv.notify_all()
+        for r in expired:
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_exception(DeadlineExceeded(
+                    f"deadline exceeded after "
+                    f"{now - r.t_submit:.3f}s in queue "
+                    f"({r.spec.algo} on {r.name!r})"))
+        return todo
+
+    def _expire(self, dq: "collections.deque[_Request]", now: float,
+                out: List[_Request]) -> None:
+        """Move dead requests out of a queue (caller holds ``_cv``)."""
+        live = [r for r in dq
+                if r.t_deadline is None or r.t_deadline > now]
+        if len(live) != len(dq):
+            out += [r for r in dq
+                    if r.t_deadline is not None and r.t_deadline <= now]
+            self._pending -= len(dq) - len(live)
+            dq.clear()
+            dq.extend(live)
+
+    # -- dispatch (worker pool) ------------------------------------------
+
+    def _dispatch(self, key: Optional[tuple],
+                  wave: List[_Request]) -> None:
+        try:
+            live = [r for r in wave
+                    if r.future.set_running_or_notify_cancel()]
+            if not live:
+                return
+            if key is None:
+                # non-coalescible requests: individual runs, one result
+                # or exception each — a wave of width 1 apiece
+                for r in live:
+                    try:
+                        r.future.set_result(
+                            self.service.run(r.name, r.spec))
+                        self._count(ok=1)
+                    except Exception as e:
+                        r.future.set_exception(e)
+                        self._count(bad=1)
+                    self._note_wave(1)
+                return
+            name, algo, pol = key
+            pend = [_Pending(r.ticket, r.name, r.spec) for r in live]
+            out = self.service._run_wave(name, algo, pol, pend)
+            for r in live:
+                res = out[r.ticket]
+                if isinstance(res, Exception):
+                    r.future.set_exception(res)
+                    self._count(bad=1)
+                else:
+                    r.future.set_result(res)
+                    self._count(ok=1)
+            self._note_wave(len(live))
+        finally:
+            with self._cv:
+                self._inflight -= 1
+                self._cv.notify_all()
+
+    def _count(self, ok: int = 0, bad: int = 0) -> None:
+        with self._cv:
+            self._stats["completed"] += ok
+            self._stats["failed"] += bad
+
+    def _note_wave(self, size: int) -> None:
+        with self._cv:
+            self._stats["waves"] += 1
+            self._stats["wave_queries"] += size
+            self._stats["coalesced_waves"] += 1 if size > 1 else 0
+            self._stats["max_wave"] = max(self._stats["max_wave"], size)
+
+    # -- introspection ---------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        with self._cv:
+            s = dict(self._stats, pending=self._pending,
+                     inflight=self._inflight)
+        s["achieved_wave"] = (s["wave_queries"] / s["waves"]
+                              if s["waves"] else 0.0)
+        return s

@@ -1,0 +1,408 @@
+"""GraphServer: the continuous-batching network front door — wave
+scheduler, deadlines, admission control, plan warming, asyncio adapter.
+
+The load-bearing invariant everywhere: results delivered through the
+server's futures are BIT-identical to direct ``GraphService.run`` calls,
+including under concurrent multi-threaded submission."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import engine as eng
+from repro.core import graph as G
+from repro.core import oracles as O
+
+
+@pytest.fixture(scope="module")
+def road():
+    return G.road_network(10, seed=1)
+
+
+@pytest.fixture()
+def svc(road):
+    svc = api.GraphService()
+    svc.register("roads", road, b=16, num_clusters=8)
+    return svc
+
+
+def paused(svc, **wave_kw):
+    """Server with the scheduler paused: submits accumulate, start()
+    then closes deterministic waves (no timing races in assertions)."""
+    wave = api.WavePolicy(**{"max_wait_s": 0.005, **wave_kw})
+    return api.GraphServer(service=svc, wave=wave, autostart=False)
+
+
+def sssp(s):
+    return api.QuerySpec(algo="sssp", sources=(s,))
+
+
+# ---------------------------------------------------------------------------
+# correctness: futures == direct runs
+# ---------------------------------------------------------------------------
+
+
+def test_live_server_results_bit_identical_to_direct_run(svc):
+    with api.GraphServer(service=svc) as server:
+        futs = {s: server.submit("roads", sssp(s)) for s in (0, 3, 7)}
+        f_pr = server.submit("roads", api.QuerySpec(algo="pagerank"))
+        for s, f in futs.items():
+            solo = svc.run("roads", sssp(s))
+            np.testing.assert_array_equal(f.result(60).values,
+                                          solo.values)
+        np.testing.assert_array_equal(
+            f_pr.result(60).values,
+            svc.run("roads", api.QuerySpec(algo="pagerank")).values)
+
+
+def test_concurrent_clients_bit_identical_and_waves_batch(svc):
+    """N client threads submit into one server; every per-request
+    result is bit-identical to sequential GraphService.run, and the
+    scheduler's stats prove the waves actually batched (size > 1)."""
+    server = paused(svc, max_wave=8)
+    sources = list(range(16))
+    futs = {}
+    lock = threading.Lock()
+    barrier = threading.Barrier(4)
+
+    def client(chunk):
+        barrier.wait()
+        for s in chunk:
+            f = server.submit("roads", sssp(s))
+            with lock:
+                futs[s] = f
+
+    threads = [threading.Thread(target=client, args=(sources[i::4],))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert server.sched.pending() == len(sources)
+    server.start()
+    for s in sources:
+        solo = svc.run("roads", sssp(s))
+        np.testing.assert_array_equal(futs[s].result(120).values,
+                                      solo.values)
+        assert futs[s].result().extra["src"] == s
+    st = server.stats()["scheduler"]
+    assert st["completed"] == len(sources)
+    assert st["waves"] == 2 and st["max_wave"] == 8    # 16 = 2 × 8
+    assert st["achieved_wave"] > 1.0
+    assert st["coalesced_waves"] == 2
+    server.close()
+
+
+def test_scheduler_coalesces_across_submits_in_wait_window(svc):
+    """A live scheduler holds a wave open for max_wait_s: requests
+    submitted within the window share one batched dispatch."""
+    server = api.GraphServer(service=svc,
+                             wave=api.WavePolicy(max_wait_s=1.0,
+                                                 max_wave=64))
+    futs = [server.submit("roads", sssp(s)) for s in (0, 3, 7)]
+    for f, s in zip(futs, (0, 3, 7)):
+        np.testing.assert_array_equal(
+            f.result(120).values, svc.run("roads", sssp(s)).values)
+    st = server.stats()["scheduler"]
+    assert st["max_wave"] >= 2   # at least two rode one wave
+    server.close()
+
+
+def test_wave_chunks_respect_max_wave(svc):
+    server = paused(svc, max_wave=2)
+    futs = [server.submit("roads", sssp(s)) for s in range(5)]
+    server.start()
+    for s, f in enumerate(futs):
+        np.testing.assert_array_equal(
+            f.result(120).values, svc.run("roads", sssp(s)).values)
+    st = server.stats()["scheduler"]
+    assert st["waves"] == 3                            # 2 + 2 + 1
+    assert st["max_wave"] == 2
+    server.close()
+
+
+def test_mixed_algorithms_route_like_gather(svc):
+    """Coalescible (sssp/bfs) and solo (pagerank/cc) requests in one
+    stream: same grouping the gather() front door would produce."""
+    server = paused(svc, max_wave=8)
+    f_s = [server.submit("roads", sssp(s)) for s in (0, 5)]
+    f_b = [server.submit("roads", api.QuerySpec(algo="bfs",
+                                                sources=(s,)))
+           for s in (0, 9)]
+    f_cc = server.submit("roads", api.QuerySpec(algo="cc"))
+    server.start()
+    for s, f in zip((0, 5), f_s):
+        np.testing.assert_array_equal(
+            f.result(120).values, svc.run("roads", sssp(s)).values)
+        assert f.result().extra["coalesced"] == 2
+    for s, f in zip((0, 9), f_b):
+        np.testing.assert_array_equal(
+            f.result(120).values,
+            svc.run("roads",
+                    api.QuerySpec(algo="bfs", sources=(s,))).values)
+    np.testing.assert_array_equal(
+        f_cc.result(120).values,
+        svc.run("roads", api.QuerySpec(algo="cc")).values)
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# fail-fast submit
+# ---------------------------------------------------------------------------
+
+
+def test_submit_unknown_graph_raises_at_submit(svc):
+    server = paused(svc)
+    with pytest.raises(KeyError, match="no graph registered"):
+        server.submit("ghost", sssp(0))
+    with pytest.raises(ValueError, match="source"):
+        server.submit("roads", api.QuerySpec(algo="sssp"))
+    assert server.sched.pending() == 0
+    server.close()
+
+
+def test_submit_after_close_is_refused(svc):
+    server = paused(svc)
+    server.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit("roads", sssp(0))
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_expired_request_resolves_deadline_exceeded_not_in_wave(svc):
+    server = paused(svc, max_wave=8)
+    f_dead = server.submit("roads", sssp(0), deadline=0.0)
+    f_live = server.submit("roads", sssp(3), deadline=120.0)
+    time.sleep(0.01)
+    server.start()
+    with pytest.raises(api.DeadlineExceeded):
+        f_dead.result(120)
+    np.testing.assert_array_equal(
+        f_live.result(120).values, svc.run("roads", sssp(3)).values)
+    st = server.stats()["scheduler"]
+    assert st["expired"] == 1
+    assert st["wave_queries"] == 1       # the dead one never rode
+    server.close()
+
+
+def test_deadline_exceeded_is_a_timeout_error(svc):
+    assert issubclass(api.DeadlineExceeded, TimeoutError)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_on_full_pending_queue(svc):
+    server = paused(svc, max_pending=2)
+    f = [server.submit("roads", sssp(s)) for s in (0, 3)]
+    with pytest.raises(api.Backpressure) as exc:
+        server.submit("roads", sssp(7))
+    assert exc.value.stats["scheduler"]["pending"] == 2
+    assert server.stats()["server"]["rejected_pending"] == 1
+    server.start()
+    for s, fut in zip((0, 3), f):
+        np.testing.assert_array_equal(
+            fut.result(120).values, svc.run("roads", sssp(s)).values)
+    server.sched.drain(timeout=120)
+    server.submit("roads", sssp(7)).result(120)   # admitted again
+    server.close()
+
+
+def test_backpressure_on_plan_store_thrash(svc):
+    server = paused(svc, thrash_evictions=3, thrash_window_s=60.0)
+    server.submit("roads", sssp(0))              # takes a sample at 0
+    svc.store._stats["evictions"] += 3           # store starts churning
+    with pytest.raises(api.Backpressure, match="thrash"):
+        server.submit("roads", sssp(3))
+    assert server.stats()["server"]["rejected_thrash"] == 1
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# eviction + shutdown semantics
+# ---------------------------------------------------------------------------
+
+
+def test_evict_resolves_queued_requests(svc):
+    svc.register("keep", G.road_network(6, seed=3), b=16,
+                 num_clusters=4)
+    server = paused(svc)
+    f_gone = server.submit("roads", sssp(0))
+    f_kept = server.submit("keep", sssp(0))
+    server.evict("roads")
+    with pytest.raises(KeyError, match="evicted"):
+        f_gone.result(120)
+    server.start()
+    assert f_kept.result(120).stats.converged
+    server.close()
+
+
+def test_close_drains_pending_requests(svc):
+    server = paused(svc)                 # scheduler never started
+    futs = [server.submit("roads", sssp(s)) for s in (0, 3)]
+    server.close()                       # drain=True completes them
+    for s, f in zip((0, 3), futs):
+        np.testing.assert_array_equal(
+            f.result(0).values, svc.run("roads", sssp(s)).values)
+
+
+def test_close_without_drain_fails_queue_with_backpressure(svc):
+    server = paused(svc)
+    fut = server.submit("roads", sssp(0))
+    server.close(drain=False)
+    with pytest.raises(api.Backpressure):
+        fut.result(0)
+
+
+def test_runtime_failure_isolated_per_future(svc, monkeypatch):
+    proc = svc.get("roads")
+    real_run = proc.run
+
+    def flaky(spec):
+        if spec.algo == "cc":
+            raise RuntimeError("engine fell over")
+        return real_run(spec)
+
+    monkeypatch.setattr(proc, "run", flaky)
+    server = paused(svc)
+    f_bad = server.submit("roads", api.QuerySpec(algo="cc"))
+    f_ok = server.submit("roads", sssp(0))
+    server.start()
+    with pytest.raises(RuntimeError, match="fell over"):
+        f_bad.result(120)
+    assert f_ok.result(120).stats.converged
+    assert server.stats()["scheduler"]["failed"] == 1
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# plan warming
+# ---------------------------------------------------------------------------
+
+
+def test_register_warms_hot_plans_from_access_log(road, tmp_path,
+                                                  monkeypatch):
+    cache = str(tmp_path / "plans")
+    s1 = api.GraphServer(cache_dir=cache)
+    s1.register("roads", road, b=16, num_clusters=8)
+    s1.run("roads", sssp(0))                       # min_plus is hot
+    s1.run("roads", api.QuerySpec(algo="pagerank"))  # plus_times too
+    s1.close()                                     # flushes access log
+
+    s2 = api.GraphServer(cache_dir=cache)
+    proc2 = s2.register("roads", road, b=16, num_clusters=8)
+    assert s2.wait_warm(timeout=120)
+    assert s2.stats()["server"]["plans_warmed"] == 2
+
+    # the compile pipeline must NOT run to serve the warmed plans
+    def boom(*a, **kw):
+        raise AssertionError("compile pipeline ran after warming")
+
+    monkeypatch.setattr(eng, "prepare", boom)
+    r = s2.run("roads", sssp(0))
+    assert proc2._prepare_calls == 0
+    np.testing.assert_allclose(r.values, O.sssp_oracle(road, 0),
+                               rtol=1e-5, atol=1e-4)
+    s2.close()
+
+
+def test_warming_skips_keys_with_foreign_session_parameters(road,
+                                                            tmp_path):
+    cache = str(tmp_path / "plans")
+    s1 = api.GraphServer(cache_dir=cache)
+    s1.register("roads", road, b=16, num_clusters=8)
+    s1.run("roads", sssp(0))
+    s1.close()
+    s2 = api.GraphServer(cache_dir=cache)
+    s2.register("roads", road, b=8, num_clusters=4)   # different tiling
+    assert s2.wait_warm(timeout=120)
+    assert s2.stats()["server"]["plans_warmed"] == 0
+    s2.close()
+
+
+def test_warm_limit_and_opt_out(road, tmp_path):
+    cache = str(tmp_path / "plans")
+    s1 = api.GraphServer(cache_dir=cache)
+    s1.register("roads", road, b=16, num_clusters=8)
+    s1.run("roads", sssp(0))
+    s1.close()
+    s2 = api.GraphServer(cache_dir=cache)
+    s2.register("roads", road, b=16, num_clusters=8, warm=False)
+    assert s2.wait_warm(timeout=120)
+    assert s2.stats()["server"]["plans_warmed"] == 0
+    s2.close()
+
+
+def test_hot_keys_orders_by_access_count(road, tmp_path):
+    store = api.PlanStore(cache_dir=str(tmp_path))
+    proc = api.GraphProcessor(road, b=16, num_clusters=8, store=store)
+    proc.prepare("min_plus")
+    for _ in range(3):
+        proc.prepare("plus_times", normalize="out_stochastic")
+    hot = store.hot_keys(road.fingerprint())
+    assert [k.semiring for k in hot] == ["plus_times", "min_plus"]
+    assert store.hot_keys(road.fingerprint(), limit=1) == hot[:1]
+    # the log survives a "process restart"
+    store.flush_access_log()
+    again = api.PlanStore(cache_dir=str(tmp_path))
+    assert again.hot_keys(road.fingerprint()) == hot
+
+
+def test_corrupt_access_log_only_costs_warming(road, tmp_path):
+    store = api.PlanStore(cache_dir=str(tmp_path))
+    proc = api.GraphProcessor(road, b=16, num_clusters=8, store=store)
+    proc.prepare("min_plus")
+    store.flush_access_log()
+    from repro.serve.graph import ACCESS_LOG
+    (tmp_path / ACCESS_LOG).write_text("{not json")
+    fresh = api.PlanStore(cache_dir=str(tmp_path))
+    assert fresh.hot_keys(road.fingerprint()) == []   # no raise
+    assert fresh.get(road.fingerprint(),
+                     proc.plan_key("min_plus")) is not None  # disk tier ok
+
+
+# ---------------------------------------------------------------------------
+# asyncio adapter
+# ---------------------------------------------------------------------------
+
+
+def test_asyncio_adapter_serves_coroutines(svc):
+    import asyncio
+
+    server = paused(svc, max_wave=4)
+
+    async def client():
+        aws = [server.submit_async("roads", sssp(s)) for s in (0, 3, 7)]
+        server.start()
+        return await asyncio.gather(*aws)
+
+    results = asyncio.run(client())
+    for s, r in zip((0, 3, 7), results):
+        np.testing.assert_array_equal(
+            r.values, svc.run("roads", sssp(s)).values)
+    assert server.stats()["scheduler"]["max_wave"] == 3
+    server.close()
+
+
+# ---------------------------------------------------------------------------
+# WavePolicy validation
+# ---------------------------------------------------------------------------
+
+
+def test_wave_policy_validates_knobs():
+    with pytest.raises(ValueError, match="max_wave"):
+        api.WavePolicy(max_wave=0)
+    with pytest.raises(ValueError, match="max_wait_s"):
+        api.WavePolicy(max_wait_s=-1.0)
+    with pytest.raises(ValueError, match="workers"):
+        api.WavePolicy(workers=0)
+    assert api.WavePolicy().but(max_wave=7).max_wave == 7

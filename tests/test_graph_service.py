@@ -227,9 +227,35 @@ def test_gather_respects_max_wave_and_policy_grouping(road):
 
 
 def test_submit_unknown_graph_fails_fast(road):
+    """Regression: an unregistered name must raise a clear KeyError at
+    submit() time — not surface later as a dead ticket at gather()."""
     svc = api.GraphService()
-    with pytest.raises(KeyError):
+    svc.register("roads", road, b=16, num_clusters=8)
+    with pytest.raises(KeyError, match="no graph registered as 'ghost'"):
         svc.submit("ghost", api.QuerySpec(algo="sssp", sources=(0,)))
+    assert svc.stats()["pending"] == 0    # nothing was queued
+    assert svc.gather() == {}             # and gather has nothing to say
+
+
+def test_plan_store_stats_split_memory_vs_disk_tiers(road, tmp_path):
+    """stats() reports per-tier hit counters AND rates: a memory hit is
+    free, a disk hit still pays a deserialize."""
+    proc = api.GraphProcessor(road, b=16, num_clusters=8)
+    p = proc.prepare("min_plus")
+    store = api.PlanStore(max_bytes=int(p.nbytes * 1.5),
+                          cache_dir=str(tmp_path))
+    fp = road.fingerprint()
+    store.put(fp, _plan_key(0), p)
+    store.get(fp, _plan_key(0))          # memory hit
+    store.put(fp, _plan_key(1), p)       # evicts 0 to disk-only
+    store.get(fp, _plan_key(0))          # disk hit
+    store.get(fp, _plan_key(9))          # miss
+    st = store.stats()
+    assert st["mem_hits"] == 1 and st["disk_hits"] == 1
+    assert st["misses"] == 1
+    assert st["mem_hit_rate"] == pytest.approx(1 / 3)
+    assert st["disk_hit_rate"] == pytest.approx(1 / 3)
+    assert st["hit_rate"] == pytest.approx(2 / 3)
 
 
 def test_submit_validates_spec_so_bad_requests_cannot_poison_a_batch(road):
