@@ -18,10 +18,13 @@ if [ "$DEVICES" -gt 1 ]; then
     export XLA_FLAGS="--xla_force_host_platform_device_count=${DEVICES}${XLA_FLAGS:+ ${XLA_FLAGS}}"
     echo "== multi-device lane: distributed engines on ${DEVICES} fake host devices =="
     # distribution suite (2-D mesh parity across factorizations runs
-    # in-process here) + the session-API suite (batched distributed
-    # dispatch through GraphProcessor/ExecutionPolicy) + the
-    # continuous-batching server (wave scheduler over a real device grid)
-    python -m pytest -x -q tests/test_distribution.py tests/test_api.py \
+    # in-process here) + the self-timed async engine (async-vs-sync
+    # bit-identity across factorizations × k) + the session-API suite
+    # (batched distributed dispatch through GraphProcessor/
+    # ExecutionPolicy) + the continuous-batching server (wave scheduler
+    # over a real device grid)
+    python -m pytest -x -q tests/test_distribution.py \
+        tests/test_async_dist.py tests/test_api.py \
         tests/test_graph_server.py
     echo "== batched distributed + serve sweep families (${DEVICES} devices) =="
     python -m benchmarks.run --scale 0.002 --json BENCH_multidev.json \

@@ -88,14 +88,19 @@ def run_algo(g, algo: str, mode: str, b: int = 16, num_clusters: int = 64):
 
 
 def run_batched(g, algo: str, sources, mode: str = "distributed",
-                query_axis=None, b: int = 16, num_clusters: int = 64):
-    """Multi-source batched run (the ``distributed_batched`` sweep
-    family's entry point).  ``query_axis=None`` auto-factors the device
-    count over the 2-D ("graph", "query") mesh; ``query_axis=0`` is the
-    per-source sequential escape hatch used as the comparison baseline."""
+                query_axis=None, b: int = 16, num_clusters: int = 64,
+                dist_flavor: str = "sync", local_sweeps: int = 1):
+    """Multi-source batched run (the ``distributed_batched`` and
+    ``dist_async`` sweep families' entry point).  ``query_axis=None``
+    auto-factors the device count over the 2-D ("graph", "query") mesh;
+    ``query_axis=0`` is the per-source sequential escape hatch used as a
+    comparison baseline; ``dist_flavor="async"`` + ``local_sweeps=k``
+    selects the self-timed engine (k local sweeps per halo exchange)."""
     proc = processor(g, b, num_clusters)
     pol = api.ExecutionPolicy(mode=mode, max_sweeps=100_000,
-                              query_axis=query_axis)
+                              query_axis=query_axis,
+                              dist_flavor=dist_flavor,
+                              local_sweeps=local_sweeps)
     t0 = time.time()
     if algo == "sssp":
         r = proc.sssp(sources=list(sources), policy=pol)

@@ -1,0 +1,90 @@
+"""``dist_async`` sweep family: the self-timed asynchronous distributed
+engine (k local sweeps per halo exchange, ``core/async_dist.py``) vs the
+bulk-synchronous one.
+
+Both flavors converge to bit-identical values; what k > 1 buys is
+COLLECTIVES — ``DistStats.halo_exchanges`` drops from one-per-sweep
+toward one-per-k-sweeps — at the price of some extra (overlappable)
+local sweeps.  The speedup is MODELED like the other families so the
+trend gate stays deterministic: per-sweep NALE compute time from the
+measured work counters, plus a reference interconnect charge per halo
+exchange (bytes / bandwidth + latency, constants below — a commodity
+25 GbE-class node, the regime the paper's self-timed argument targets).
+The sync engine pays ``sweeps × (compute + exchange)``; the async engine
+pays its straggler's local sweeps of compute but only ``halo_exchanges``
+exchange charges.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core import power as PW
+
+from . import common
+
+QUERIES = 4          # sources per batch
+KS = (2, 4)          # local sweeps per exchange
+NET_BYTES_PER_S = 3e9   # reference interconnect bandwidth (~25 GbE)
+NET_LATENCY_S = 20e-6   # per-collective launch + rendezvous latency
+REF_GRAPH_SHARDS = 8    # modeled "graph" extent for the halo volume
+
+
+def _exchange_time_s(dist) -> float:
+    """Modeled wall time of ONE tiled halo all_gather on the reference
+    node: per-device payload over the wire plus collective latency."""
+    payload = dist.halo_bytes_per_sweep * max(REF_GRAPH_SHARDS /
+                                              max(dist.mesh_shape[0], 1),
+                                              1.0)
+    return payload / NET_BYTES_PER_S + NET_LATENCY_S
+
+
+def run(graphs=None, emit=common.csv_line):
+    graphs = graphs or common.load_graphs()
+    rows = []
+    for gname, g in graphs.items():
+        sources = [int(s) for s in
+                   np.linspace(0, g.n - 1, QUERIES, dtype=np.int64)]
+        for algo in ("sssp", "bfs"):
+            rs, wall_s = common.run_batched(g, algo, sources)
+            ds_sync = rs.extra["dist"]
+            p = rs.prepared
+            t_sweep = PW.model_nale(
+                p, eng.bsp_stats(p, 1, True, "distributed")).time_s
+            t_exch = _exchange_time_s(ds_sync)
+            # BSP: every sweep pays compute + a blocking exchange
+            sync_s = ds_sync.sweeps * (t_sweep + t_exch)
+            for k in KS:
+                ra, wall_a = common.run_batched(
+                    g, algo, sources, dist_flavor="async",
+                    local_sweeps=k)
+                ds = ra.extra["dist"]
+                assert np.array_equal(np.asarray(ra.values),
+                                      np.asarray(rs.values)), \
+                    f"async flavor diverged on {gname}/{algo} k={k}"
+                # self-timed: straggler-bound local compute + one
+                # exchange charge per round (the double-buffered gather
+                # overlaps interior compute; charging it fully keeps the
+                # model conservative)
+                async_s = ds.sweeps * t_sweep \
+                    + ds.halo_exchanges * t_exch
+                speedup = sync_s / max(async_s, 1e-12)
+                halo_red = ds_sync.halo_exchanges / max(
+                    ds.halo_exchanges, 1)
+                emit(f"dist_async/{gname}/{algo}/k{k}", wall_a * 1e6,
+                     f"exchanges={ds_sync.halo_exchanges}->"
+                     f"{ds.halo_exchanges} ({halo_red:.2f}x) "
+                     f"sweeps={ds_sync.sweeps}->{ds.sweeps} "
+                     f"modeled_speedup={speedup:.2f}x")
+                rows.append(dict(
+                    graph=gname, algo=algo, k=k, queries=len(sources),
+                    sweeps_sync=ds_sync.sweeps, sweeps_async=ds.sweeps,
+                    exchanges_sync=ds_sync.halo_exchanges,
+                    exchanges_async=ds.halo_exchanges,
+                    halo_exchange_reduction=halo_red,
+                    shard_sweeps=[int(s) for s in ds.shard_sweeps],
+                    halo_bytes_per_exchange=ds.halo_bytes_per_sweep,
+                    speedup_vs_sync=speedup,
+                    wall_async_s=wall_a, wall_sync_s=wall_s))
+    return rows

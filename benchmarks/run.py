@@ -20,8 +20,8 @@ import json
 
 import numpy as np
 
-from . import async_vs_sync, common, dist_batched, fig5_cycles, \
-    fig6_power, kernel_bench, lm_bench, serve_latency
+from . import async_vs_sync, common, dist_async, dist_batched, \
+    fig5_cycles, fig6_power, kernel_bench, lm_bench, serve_latency
 
 
 def main() -> None:
@@ -33,8 +33,8 @@ def main() -> None:
                     help="output path for the machine-readable snapshot "
                          "('' disables)")
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=["fig5", "fig6", "avs", "dist", "kernel",
-                             "lm", "serve"])
+                    choices=["fig5", "fig6", "avs", "dist", "dist_async",
+                             "kernel", "lm", "serve"])
     args = ap.parse_args()
 
     graphs = common.load_graphs(args.scale)
@@ -53,6 +53,8 @@ def main() -> None:
         out["async_vs_sync"] = async_vs_sync.run(graphs)
     if "dist" not in args.skip:
         out["distributed_batched"] = dist_batched.run(graphs)
+    if "dist_async" not in args.skip:
+        out["dist_async"] = dist_async.run(graphs)
     if "serve" not in args.skip:
         out["serve_latency"] = serve_latency.run(graphs)
     if "kernel" not in args.skip:
@@ -87,6 +89,13 @@ def main() -> None:
         print(f"batched distributed dispatch (modeled, "
               f"{dist_batched.REF_DEVICES}-device node): geomean "
               f"{np.exp(np.log(ds).mean()):.2f}x vs per-source loop")
+    if "dist_async" in out:
+        da = out["dist_async"]
+        sp = np.array([r["speedup_vs_sync"] for r in da])
+        hr = np.array([r["halo_exchange_reduction"] for r in da])
+        print(f"self-timed distributed engine (modeled): geomean "
+              f"{np.exp(np.log(sp).mean()):.2f}x vs bulk-synchronous, "
+              f"halo exchanges cut {np.exp(np.log(hr).mean()):.2f}x")
     if "serve_latency" in out:
         sl = out["serve_latency"]
         sp = np.array([r["speedup_vs_unbatched"] for r in sl])

@@ -39,6 +39,16 @@ def _dist_batched_speedups(snapshot: dict) -> dict:
             if r.get("speedup_vs_sequential") is not None}
 
 
+def _dist_async_speedups(snapshot: dict) -> dict:
+    # gates the self-timed engine's modeled advantage over the
+    # bulk-synchronous flavor, per (graph, algo, k) — a regression here
+    # means the exchange schedule got chattier or sweeps ballooned
+    return {(r["graph"], r["algo"], f"k{r['k']}"):
+            float(r["speedup_vs_sync"])
+            for r in snapshot.get("dist_async", [])
+            if r.get("speedup_vs_sync") is not None}
+
+
 def _serve_latency_speedups(snapshot: dict) -> dict:
     # the family's wall p50/p99 are operator info (host-dependent); the
     # gated number is the modeled batching speedup, which depends only
@@ -52,6 +62,7 @@ def _serve_latency_speedups(snapshot: dict) -> dict:
 FAMILIES = {
     "fig5": _fig5_speedups,
     "distributed_batched": _dist_batched_speedups,
+    "dist_async": _dist_async_speedups,
     "serve_latency": _serve_latency_speedups,
 }
 

@@ -38,6 +38,7 @@ from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
                        QuerySpec, Result)
 from .core.engine import (Prepared, RunStats,  # noqa: F401
                           deserialize_prepared, serialize_prepared)
+from .core.placement import DistStats  # noqa: F401
 from .serve.graph import GraphService, PlanStore  # noqa: F401
 from .serve.sched import (Backpressure, DeadlineExceeded,  # noqa: F401
                           WavePolicy, WaveScheduler)
@@ -45,6 +46,6 @@ from .serve.server import GraphServer  # noqa: F401
 
 __all__ = ["ExecutionPolicy", "GraphProcessor", "GraphService", "PlanKey",
            "PlanStore", "QuerySpec", "Result", "Prepared", "RunStats",
-           "serialize_prepared", "deserialize_prepared", "GraphServer",
-           "WaveScheduler", "WavePolicy", "DeadlineExceeded",
-           "Backpressure"]
+           "DistStats", "serialize_prepared", "deserialize_prepared",
+           "GraphServer", "WaveScheduler", "WavePolicy",
+           "DeadlineExceeded", "Backpressure"]

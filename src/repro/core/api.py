@@ -38,6 +38,7 @@ from .graph import Graph, to_ell_fast
 
 MODES = ("sync", "async", "distributed")
 IMPLS = ("ref", "pallas")
+DIST_FLAVORS = ("sync", "async")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +57,15 @@ class ExecutionPolicy:
            (``placement.factor_query_axis``); an int >= 1 pins the
            "query" mesh extent (must divide the device count); 0 is the
            escape hatch back to the retired per-source sequential loop.
+    dist_flavor:  exchange schedule of the distributed engine.  "sync"
+           (default) is the bulk-synchronous path — one halo exchange
+           per sweep; "async" is the self-timed engine
+           (``core.async_dist``) — ``local_sweeps`` Gauss-Seidel
+           relaxations per exchange with an overlapped, double-buffered
+           halo, bit-identical at convergence for the idempotent
+           "relax" algorithms (SSSP/BFS/CC/reachability).
+    local_sweeps:  k, local sweeps per halo exchange; only meaningful
+           (and only legal ≠ 1) with ``dist_flavor="async"``.
     """
 
     mode: str = "async"
@@ -64,6 +74,8 @@ class ExecutionPolicy:
     tol: float = 1e-6
     max_sweeps: int = 10_000
     query_axis: Optional[int] = None
+    dist_flavor: str = "sync"
+    local_sweeps: int = 1
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -74,6 +86,27 @@ class ExecutionPolicy:
             raise ValueError(
                 "query_axis must be None (auto), 0 (per-source "
                 f"fallback) or a positive extent: {self.query_axis!r}")
+        if self.dist_flavor not in DIST_FLAVORS:
+            raise ValueError(
+                f"dist_flavor must be one of {DIST_FLAVORS}: "
+                f"{self.dist_flavor!r}")
+        if self.local_sweeps < 1:
+            raise ValueError(
+                f"local_sweeps must be >= 1, got {self.local_sweeps!r}")
+        if self.dist_flavor == "async" and self.mode != "distributed":
+            raise ValueError(
+                "dist_flavor='async' selects the self-timed distributed "
+                f"engine and requires mode='distributed', not "
+                f"{self.mode!r}")
+        if self.local_sweeps != 1 and self.dist_flavor != "async":
+            raise ValueError(
+                f"local_sweeps={self.local_sweeps} needs "
+                "dist_flavor='async'; the bulk-synchronous engine "
+                "exchanges every sweep by construction")
+        if self.dist_flavor == "async" and self.query_axis == 0:
+            raise ValueError(
+                "query_axis=0 (per-source sequential fallback) has no "
+                "async flavor; use query_axis=None or a mesh extent")
 
     def but(self, **kw) -> "ExecutionPolicy":
         """Copy with overrides (policy objects are frozen)."""
@@ -387,8 +420,17 @@ class GraphProcessor:
             x, stats = eng.run_async(p, x0, impl=pol.impl,
                                      changed0=self._frontier(p, src), **kw)
             return x, stats, {}
-        # distributed: shard_map engine (sync semantics, ref kernels)
+        # distributed: shard_map engine over the device mesh (ref
+        # kernels).  dist_flavor picks the exchange schedule: "sync" =
+        # bulk-synchronous (one exchange per sweep), "async" = self-timed
+        # k-local-sweep engine with overlapped halo (core.async_dist).
         from . import placement
+        if pol.dist_flavor == "async":
+            from . import async_dist
+            x, dist = async_dist.distributed_async_run(
+                p, x0, local_sweeps=pol.local_sweeps, **kw)
+            stats = eng.dist_run_stats(p, dist)
+            return x, stats, {"dist": dist}
         x, dist = placement.distributed_sync_run(p, x0, **kw)
         stats = eng.bsp_stats(p, dist.sweeps, dist.converged,
                               "distributed")
@@ -409,16 +451,23 @@ class GraphProcessor:
             # is the straggler's, work counters total the query axis.
             # Stack on host: the engine pads/shards the frontier itself,
             # so a device-resident stack would round-trip pointlessly.
-            from . import placement
             x0 = np.stack([np.asarray(p.to_blocks(x0f(s), pad))
                            for s in sources])
-            x, dist = placement.distributed_sync_run_batched(
-                p, x0, apply_kind=apply_kind, damping=pol.damping,
-                tol=pol.tol, max_sweeps=pol.max_sweeps,
-                query_axis=pol.query_axis)
-            stats = eng.bsp_stats(
-                p, dist.sweeps, dist.converged, "distributed",
-                work_sweeps=int(dist.query_sweeps.sum()))
+            ekw = dict(apply_kind=apply_kind, damping=pol.damping,
+                       tol=pol.tol, max_sweeps=pol.max_sweeps,
+                       query_axis=pol.query_axis)
+            if pol.dist_flavor == "async":
+                from . import async_dist
+                x, dist = async_dist.distributed_async_run_batched(
+                    p, x0, local_sweeps=pol.local_sweeps, **ekw)
+                stats = eng.dist_run_stats(p, dist)
+            else:
+                from . import placement
+                x, dist = placement.distributed_sync_run_batched(
+                    p, x0, **ekw)
+                stats = eng.bsp_stats(
+                    p, dist.sweeps, dist.converged, "distributed",
+                    work_sweeps=int(dist.query_sweeps.sum()))
             values = np.stack([post(p.from_blocks(x[q]))
                                for q in range(len(sources))])
             extra = {"algo": spec.algo, "sources": sources, "dist": dist}

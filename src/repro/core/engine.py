@@ -339,6 +339,27 @@ def bsp_stats(p: Prepared, sweeps: int, converged: bool, mode: str,
         total_groups=p.s, mode=mode)
 
 
+def dist_run_stats(p: Prepared, dist, mode: str = "distributed"
+                   ) -> RunStats:
+    """Work counters for a distributed run described by a
+    ``placement.DistStats``.  Compute work follows the sweep counts as in
+    :func:`bsp_stats`, but halo traffic is charged per *exchange*: the
+    self-timed flavor's entire point is ``halo_exchanges < sweeps`` when
+    ``local_sweeps > 1``, and the modeled boundary traffic must show it.
+    """
+    qs = dist.query_sweeps
+    w = int(qs.sum()) if qs is not None else int(dist.sweeps)
+    return RunStats(
+        sweeps=dist.sweeps, converged=dist.converged,
+        tile_work=p.tiles_total * w,
+        edge_work=p.edges_total * w,
+        crit_tiles=float(np.max(np.asarray(p.group_tiles))) * dist.sweeps,
+        active_group_sweeps=float(p.s * w),
+        halo_tiles=float(np.asarray(p.group_ext_tiles).sum())
+        * dist.halo_exchanges,
+        total_groups=p.s, mode=mode)
+
+
 # ---------------------------------------------------------------------------
 # synchronous (BSP / Jacobi) engine
 # ---------------------------------------------------------------------------

@@ -74,10 +74,19 @@ def factor_query_axis(num_devices: int, num_queries: int) -> int:
 class DistStats:
     sweeps: int
     converged: bool
-    halo_bytes_per_sweep: float   # all_gather payload (per device)
+    halo_bytes_per_sweep: float   # all_gather payload per exchange (per device)
     cut_fraction: float
     mesh_shape: Tuple[int, int] = (1, 1)       # (graph, query) extent
     query_sweeps: Optional[np.ndarray] = None  # per-query sweep counts
+    # self-timed accounting (PR 7): the bulk-synchronous engines exchange
+    # once per sweep, so halo_exchanges == sweeps there; the async flavor
+    # (core/async_dist.py) runs local_sweeps relaxations per exchange and
+    # reports strictly fewer exchanges on multi-sweep fixpoints.
+    halo_exchanges: int = 0
+    local_sweeps: int = 1                      # k (1 = bulk-synchronous)
+    shard_sweeps: Optional[np.ndarray] = None  # per-"graph"-shard active
+    #                                            local sweeps (self-timed
+    #                                            rate of each shard)
 
 
 def _pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:
@@ -86,6 +95,89 @@ def _pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:
         return arr
     widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
     return np.pad(arr, widths, constant_values=0)
+
+
+@dataclasses.dataclass
+class ShardedBatch:
+    """Host-side scaffolding shared by every batched distributed flavor:
+    the mesh, the row/query padding, and the padded input arrays a
+    ``("graph", "query")`` shard_map dispatch consumes.
+
+    Built by :func:`shard_batched_inputs`; both the bulk-synchronous
+    engine (:func:`distributed_sync_run_batched`) and the self-timed
+    asynchronous one (``core.async_dist``) run on exactly this layout,
+    which is what makes their converged states comparable bit-for-bit.
+    """
+
+    mesh: Mesh
+    d_g: int                # "graph" extent
+    d_q: int                # "query" extent
+    r_pad: int              # rows padded to a multiple of d_g
+    q_pad: int              # queries padded to a multiple of d_q
+    q: int                  # real (un-padded) query count
+    vals: np.ndarray
+    cols: np.ndarray
+    nnz: np.ndarray
+    valid: np.ndarray
+    x0: np.ndarray          # (q_pad, r_pad, B)
+    qlive: np.ndarray       # (q_pad,) — padding queries start converged
+
+    def halo_bytes_per_exchange(self, b: int) -> float:
+        """Remote bytes a device gathers in ONE tiled all_gather of the
+        frontier (summed over its resident query rows)."""
+        return (self.r_pad // self.d_g) * b * 4.0 * (self.d_g - 1) * \
+            (self.q_pad // self.d_q)
+
+
+def shard_batched_inputs(p: Prepared, x0: jnp.ndarray,
+                         mesh: Optional[Mesh] = None,
+                         query_axis: Optional[int] = None) -> ShardedBatch:
+    """Pad a ``Prepared`` image and a stacked ``(Q, r_pad, B)`` frontier
+    for a 2-D ``("graph", "query")`` mesh dispatch.
+
+    Rows are padded to a multiple of the "graph" extent (min-semiring
+    padding rows hold +inf so they never win a reduction), queries to a
+    multiple of the "query" extent (padding queries are marked dead in
+    ``qlive`` — converged from sweep 0, zero work).  ``query_axis=None``
+    auto-factors the device count against the batch size; 0 is rejected
+    here for every flavor (the per-source escape hatch lives in the
+    session API, not the engines).
+    """
+    Q = int(x0.shape[0])
+    if query_axis is not None and query_axis < 1:
+        # the query_axis=0 per-source escape hatch lives one layer up
+        # (GraphProcessor._run_batched) — the engine itself must never
+        # silently reinterpret 0 as "auto-factor"
+        raise ValueError(
+            "batched distributed engines need query_axis=None (auto) "
+            f"or >= 1, got {query_axis}; the query_axis=0 per-source "
+            "loop is dispatched by the session API, not the engine")
+    if mesh is None:
+        ndev = len(jax.devices())
+        mesh = make_graph_mesh(
+            ndev, query_axis or factor_query_axis(ndev, Q))
+    shape = dict(mesh.shape)
+    d_g = shape["graph"]
+    d_q = shape.get("query", 1)
+
+    r_pad = ((p.r_pad + d_g - 1) // d_g) * d_g
+    vals = _pad_rows(np.asarray(p.vals), r_pad)
+    cols = _pad_rows(np.asarray(p.cols), r_pad)
+    nnz = _pad_rows(np.asarray(p.nnz), r_pad)
+    valid = _pad_rows(np.asarray(p.valid), r_pad)
+    q_pad = ((Q + d_q - 1) // d_q) * d_q
+    x0 = np.asarray(x0)
+    x0 = np.concatenate(
+        [x0, np.zeros((q_pad - Q,) + x0.shape[1:], x0.dtype)])
+    x0 = np.stack([_pad_rows(x0[qi], r_pad) for qi in range(q_pad)])
+    if p.semiring in ("min_plus", "min_select"):
+        # padding rows must not corrupt min-reductions
+        x0[:, p.r_pad:] = np.inf
+    # padding queries start converged: frozen from sweep 0, zero work
+    qlive = np.arange(q_pad) < Q
+    return ShardedBatch(mesh=mesh, d_g=d_g, d_q=d_q, r_pad=r_pad,
+                        q_pad=q_pad, q=Q, vals=vals, cols=cols, nnz=nnz,
+                        valid=valid, x0=x0, qlive=qlive)
 
 
 def distributed_sync_run(
@@ -140,7 +232,8 @@ def distributed_sync_run(
     stats = DistStats(sweeps=int(i[0]), converged=bool(done[0]),
                       halo_bytes_per_sweep=float(halo),
                       cut_fraction=p.clustering.cut_fraction,
-                      mesh_shape=(d, dict(mesh.shape).get("query", 1)))
+                      mesh_shape=(d, dict(mesh.shape).get("query", 1)),
+                      halo_exchanges=int(i[0]))  # BSP: one per sweep
     return x[: p.r_pad], stats
 
 
@@ -166,45 +259,15 @@ def distributed_sync_run_batched(
     count); None auto-factors via :func:`factor_query_axis`.  Ignored
     when ``mesh`` is given.
     """
-    Q = int(x0.shape[0])
-    if query_axis is not None and query_axis < 1:
-        # the query_axis=0 per-source escape hatch lives one layer up
-        # (GraphProcessor._run_batched) — the engine itself must never
-        # silently reinterpret 0 as "auto-factor"
-        raise ValueError(
-            "distributed_sync_run_batched needs query_axis=None (auto) "
-            f"or >= 1, got {query_axis}; the query_axis=0 per-source "
-            "loop is dispatched by the session API, not the engine")
-    if mesh is None:
-        ndev = len(jax.devices())
-        mesh = make_graph_mesh(
-            ndev, query_axis or factor_query_axis(ndev, Q))
-    shape = dict(mesh.shape)
-    d_g = shape["graph"]
-    d_q = shape.get("query", 1)
+    sb = shard_batched_inputs(p, x0, mesh=mesh, query_axis=query_axis)
+    Q, d_g, d_q = sb.q, sb.d_g, sb.d_q
     ring = sr.get(p.semiring)
-
-    r_pad = ((p.r_pad + d_g - 1) // d_g) * d_g
-    vals = _pad_rows(np.asarray(p.vals), r_pad)
-    cols = _pad_rows(np.asarray(p.cols), r_pad)
-    nnz = _pad_rows(np.asarray(p.nnz), r_pad)
-    valid = _pad_rows(np.asarray(p.valid), r_pad)
-    q_pad = ((Q + d_q - 1) // d_q) * d_q
-    x0 = np.asarray(x0)
-    x0 = np.concatenate(
-        [x0, np.zeros((q_pad - Q,) + x0.shape[1:], x0.dtype)])
-    x0 = np.stack([_pad_rows(x0[qi], r_pad) for qi in range(q_pad)])
-    if p.semiring in ("min_plus", "min_select"):
-        # padding rows must not corrupt min-reductions
-        x0[:, p.r_pad:] = np.inf
-    # padding queries start converged: frozen from sweep 0, zero work
-    qlive = np.arange(q_pad) < Q
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     damping = jnp.float32(damping)
     tol = jnp.float32(tol)
 
     @functools.partial(
-        _shard_map, mesh=mesh,
+        _shard_map, mesh=sb.mesh,
         in_specs=(P("graph"), P("graph"), P("graph"), P("graph"),
                   P("query", "graph"), P("query")),
         out_specs=(P("query", "graph"), P("query"), P("query")),
@@ -243,16 +306,17 @@ def distributed_sync_run_batched(
         return x, sweeps_q, done_q
 
     x, sweeps_q, done_q = run(
-        jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(nnz),
-        jnp.asarray(valid), jnp.asarray(x0), jnp.asarray(qlive))
+        jnp.asarray(sb.vals), jnp.asarray(sb.cols), jnp.asarray(sb.nnz),
+        jnp.asarray(sb.valid), jnp.asarray(sb.x0), jnp.asarray(sb.qlive))
     sweeps_q = np.asarray(sweeps_q)[:Q]
-    halo = (r_pad // d_g) * p.b * 4.0 * (d_g - 1) * (q_pad // d_q)
+    straggler = int(sweeps_q.max(initial=0))
     stats = DistStats(
-        sweeps=int(sweeps_q.max(initial=0)),
+        sweeps=straggler,
         converged=bool(np.all(np.asarray(done_q)[:Q])),
-        halo_bytes_per_sweep=float(halo),
+        halo_bytes_per_sweep=sb.halo_bytes_per_exchange(p.b),
         cut_fraction=p.clustering.cut_fraction,
-        mesh_shape=(d_g, d_q), query_sweeps=sweeps_q)
+        mesh_shape=(d_g, d_q), query_sweeps=sweeps_q,
+        halo_exchanges=straggler)  # bulk-synchronous: one per sweep
     return x[:Q, : p.r_pad], stats
 
 

@@ -432,9 +432,10 @@ class GraphService:
         wave executes on whatever engine the resolved policy names: vmap
         over the sync/async engines, or — for ``mode="distributed"`` —
         ONE 2-D ``("graph", "query")`` shard_map dispatch
-        (``placement.distributed_sync_run_batched``), so a distributed
-        plan's wave scales over both mesh axes instead of looping
-        per source.  Per-query convergence is masked in all engines, so
+        (``placement.distributed_sync_run_batched``, or the self-timed
+        ``async_dist.distributed_async_run_batched`` when the policy says
+        ``dist_flavor="async"``), so a distributed plan's wave scales
+        over both mesh axes instead of looping per source.  Per-query convergence is masked in all engines, so
         coalesced values are identical to what sequential ``run`` calls
         produce.  Everything else (PageRank, CC, already-batched specs,
         …) runs individually.
@@ -520,6 +521,9 @@ class GraphService:
                     # factorization / per-query sweeps per ticket
                     if k in batch.extra:
                         extra[k] = batch.extra[k]
+                if "dist" in batch.extra:
+                    # which exchange schedule actually served the wave
+                    extra["dist_flavor"] = pol.dist_flavor
                 results[q.ticket] = Result(
                     np.asarray(batch.values[row]), batch.stats,
                     batch.prepared, extra, policy=pol,

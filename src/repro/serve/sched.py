@@ -17,6 +17,9 @@ Execution goes through ``GraphService._run_wave`` — the exact code path
 ``GraphService.run`` calls.  Requests carry an optional *deadline*; a
 request that expires while queued resolves to ``DeadlineExceeded``
 instead of occupying a row in a wave somebody else is waiting on.
+``Future.cancel()`` before the wave closes is honored the same way: the
+request is purged from its pending group at wave-close time and never
+occupies a wave row (``stats()["cancelled"]`` counts them).
 """
 
 from __future__ import annotations
@@ -124,7 +127,8 @@ class WaveScheduler:
         self._pool = ThreadPoolExecutor(max_workers=policy.workers,
                                         thread_name_prefix="repro-wave")
         self._stats = dict(waves=0, wave_queries=0, coalesced_waves=0,
-                           max_wave=0, expired=0, completed=0, failed=0)
+                           max_wave=0, expired=0, cancelled=0,
+                           completed=0, failed=0)
 
     # -- client side -----------------------------------------------------
 
@@ -270,6 +274,9 @@ class WaveScheduler:
         todo: List[Tuple[Optional[tuple], List[_Request]]] = []
         now = time.monotonic()
         with self._cv:
+            ncancel = self._purge_cancelled(self._singles)
+            for dq in self._groups.values():
+                ncancel += self._purge_cancelled(dq)
             self._expire(self._singles, now, expired)
             if self._singles:
                 wave = list(self._singles)
@@ -291,7 +298,7 @@ class WaveScheduler:
                 if not dq:
                     del self._groups[key]
             self._stats["expired"] += len(expired)
-            if expired:
+            if expired or ncancel:
                 self._cv.notify_all()
         for r in expired:
             if r.future.set_running_or_notify_cancel():
@@ -300,6 +307,20 @@ class WaveScheduler:
                     f"{now - r.t_submit:.3f}s in queue "
                     f"({r.spec.algo} on {r.name!r})"))
         return todo
+
+    def _purge_cancelled(self, dq: "collections.deque[_Request]") -> int:
+        """Drop requests whose ``Future.cancel()`` landed before the wave
+        closed, so a cancelled request never occupies a wave row (caller
+        holds ``_cv``).  Cancelled futures are already resolved —
+        ``cancel()`` did that — so they only need forgetting here."""
+        live = [r for r in dq if not r.future.cancelled()]
+        gone = len(dq) - len(live)
+        if gone:
+            self._pending -= gone
+            self._stats["cancelled"] += gone
+            dq.clear()
+            dq.extend(live)
+        return gone
 
     def _expire(self, dq: "collections.deque[_Request]", now: float,
                 out: List[_Request]) -> None:

@@ -135,6 +135,28 @@ def test_policy_validation():
     assert pol.mode == "async"  # frozen: but() copies
 
 
+def test_policy_dist_flavor_validation():
+    """Incoherent dist_flavor / local_sweeps combos fail loudly at
+    construction, not deep in dispatch."""
+    with pytest.raises(ValueError, match="local_sweeps"):
+        api.ExecutionPolicy(local_sweeps=0)
+    with pytest.raises(ValueError, match="dist_flavor"):
+        api.ExecutionPolicy(dist_flavor="turbo")
+    with pytest.raises(ValueError, match="mode='distributed'"):
+        api.ExecutionPolicy(dist_flavor="async")  # default mode=async
+    with pytest.raises(ValueError, match="dist_flavor='async'"):
+        api.ExecutionPolicy(mode="sync", local_sweeps=2)
+    with pytest.raises(ValueError, match="per-source"):
+        api.ExecutionPolicy(mode="distributed", dist_flavor="async",
+                            query_axis=0)
+    pol = api.ExecutionPolicy(mode="distributed", dist_flavor="async",
+                              local_sweeps=4)
+    assert pol.local_sweeps == 4
+    # but() re-validates: dropping the mode invalidates the flavor
+    with pytest.raises(ValueError, match="mode='distributed'"):
+        pol.but(mode="sync")
+
+
 def test_result_platform_models(road, proc):
     r_async = proc.sssp(0)
     models = r_async.platform_models()

@@ -196,6 +196,40 @@ def test_deadline_exceeded_is_a_timeout_error(svc):
     assert issubclass(api.DeadlineExceeded, TimeoutError)
 
 
+def test_cancelled_future_never_occupies_a_wave_row(svc):
+    """Future.cancel() before the wave closes drops the request from its
+    pending group (ROADMAP PR-6 follow-up): the wave that runs is one
+    row smaller and the scheduler counts the cancellation."""
+    server = paused(svc, max_wave=8)
+    futs = [server.submit("roads", sssp(s)) for s in (0, 3, 7)]
+    assert futs[1].cancel()                 # still queued → cancellable
+    assert server.sched.pending() == 3      # purge happens at wave close
+    server.start()
+    assert server.sched.drain(timeout=120)
+    for f, s in ((futs[0], 0), (futs[2], 7)):
+        np.testing.assert_array_equal(
+            f.result(120).values, svc.run("roads", sssp(s)).values)
+    assert futs[1].cancelled()
+    st = server.stats()["scheduler"]
+    assert st["cancelled"] == 1
+    assert st["completed"] == 2
+    assert st["wave_queries"] == 2          # the cancelled row never rode
+    assert st["max_wave"] == 2
+    server.close()
+
+
+def test_cancel_after_dispatch_is_refused(svc):
+    """Once a wave closed and began running, cancel() loses the race —
+    the future still delivers its result (Future semantics: cancel only
+    succeeds before set_running_or_notify_cancel)."""
+    with api.GraphServer(service=svc) as server:
+        f = server.submit("roads", sssp(0))
+        f.result(120)                       # already ran to completion
+        assert not f.cancel()
+        np.testing.assert_array_equal(
+            f.result().values, svc.run("roads", sssp(0)).values)
+
+
 # ---------------------------------------------------------------------------
 # admission control
 # ---------------------------------------------------------------------------
