@@ -34,7 +34,7 @@ def main() -> None:
                          "('' disables)")
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["fig5", "fig6", "avs", "dist", "dist_async",
-                             "kernel", "lm", "serve"])
+                             "kernel", "kernel_fused", "lm", "serve"])
     args = ap.parse_args()
 
     graphs = common.load_graphs(args.scale)
@@ -59,6 +59,8 @@ def main() -> None:
         out["serve_latency"] = serve_latency.run(graphs)
     if "kernel" not in args.skip:
         out["kernel"] = kernel_bench.run(graphs)
+    if "kernel_fused" not in args.skip:
+        out["kernel_fused"] = kernel_bench.run_fused(args.scale)
     if "lm" not in args.skip:
         out["lm"] = lm_bench.run(graphs)
 
@@ -96,6 +98,16 @@ def main() -> None:
         print(f"self-timed distributed engine (modeled): geomean "
               f"{np.exp(np.log(sp).mean()):.2f}x vs bulk-synchronous, "
               f"halo exchanges cut {np.exp(np.log(hr).mean()):.2f}x")
+    if "kernel_fused" in out:
+        kf = out["kernel_fused"]
+        sp = np.array([r["speedup_modeled"] for r in kf])
+        sk = np.array([r["tiles_skipped"] for r in kf])
+        road = [r for r in kf if r["graph"] == "road" and r["algo"] == "bfs"]
+        print(f"fused frontier-masked kernel (modeled): geomean "
+              f"{np.exp(np.log(sp).mean()):.2f}x vs unfused sync loop, "
+              f"tiles skipped {sk.min():.0%}..{sk.max():.0%}"
+              + (f" (sparse-frontier BFS: {road[0]['speedup_modeled']:.2f}x,"
+                 f" {road[0]['tiles_skipped']:.0%} skipped)" if road else ""))
     if "serve_latency" in out:
         sl = out["serve_latency"]
         sp = np.array([r["speedup_vs_unbatched"] for r in sl])

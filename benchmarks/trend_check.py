@@ -49,6 +49,16 @@ def _dist_async_speedups(snapshot: dict) -> dict:
             if r.get("speedup_vs_sync") is not None}
 
 
+def _kernel_fused_speedups(snapshot: dict) -> dict:
+    # gates the fused kernel's modeled advantage over the unfused sync
+    # loop (active-tile skipping + 3-launches-to-1 fusion); tile_work
+    # comes from engine counters, so drift means the frontier trajectory
+    # or the skipping itself changed
+    return {(r["graph"], r["algo"]): float(r["speedup_modeled"])
+            for r in snapshot.get("kernel_fused", [])
+            if r.get("speedup_modeled") is not None}
+
+
 def _serve_latency_speedups(snapshot: dict) -> dict:
     # the family's wall p50/p99 are operator info (host-dependent); the
     # gated number is the modeled batching speedup, which depends only
@@ -63,6 +73,7 @@ FAMILIES = {
     "fig5": _fig5_speedups,
     "distributed_batched": _dist_batched_speedups,
     "dist_async": _dist_async_speedups,
+    "kernel_fused": _kernel_fused_speedups,
     "serve_latency": _serve_latency_speedups,
 }
 

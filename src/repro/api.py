@@ -6,7 +6,8 @@ Prepare-once / query-many graph processing (see ``core/api.py``):
     proc = api.GraphProcessor(g, b=16, num_clusters=64)
     pr = proc.pagerank()
     d = proc.sssp(sources=[0, 5, 9])          # batched, one compile
-    fast = api.ExecutionPolicy(mode="async", impl="pallas")
+    fast = api.ExecutionPolicy(mode="async", kernel=api.KernelSpec(
+        impl="pallas", fuse_frontier=True, autotune=True))
     d2 = proc.sssp(0, policy=fast)
 
 Serving many graphs (see ``serve/graph.py``): a ``GraphService`` holds a
@@ -39,13 +40,14 @@ from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
 from .core.engine import (Prepared, RunStats,  # noqa: F401
                           deserialize_prepared, serialize_prepared)
 from .core.placement import DistStats  # noqa: F401
+from .kernels.spec import KernelSpec  # noqa: F401
 from .serve.graph import GraphService, PlanStore  # noqa: F401
 from .serve.sched import (Backpressure, DeadlineExceeded,  # noqa: F401
                           WavePolicy, WaveScheduler)
 from .serve.server import GraphServer  # noqa: F401
 
-__all__ = ["ExecutionPolicy", "GraphProcessor", "GraphService", "PlanKey",
-           "PlanStore", "QuerySpec", "Result", "Prepared", "RunStats",
-           "DistStats", "serialize_prepared", "deserialize_prepared",
-           "GraphServer", "WaveScheduler", "WavePolicy",
-           "DeadlineExceeded", "Backpressure"]
+__all__ = ["ExecutionPolicy", "GraphProcessor", "GraphService",
+           "KernelSpec", "PlanKey", "PlanStore", "QuerySpec", "Result",
+           "Prepared", "RunStats", "DistStats", "serialize_prepared",
+           "deserialize_prepared", "GraphServer", "WaveScheduler",
+           "WavePolicy", "DeadlineExceeded", "Backpressure"]

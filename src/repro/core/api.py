@@ -26,6 +26,7 @@ analytical NALE/CPU/GPU cycle & power models.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
@@ -35,6 +36,7 @@ import numpy as np
 from . import engine as eng
 from .engine import Prepared, RunStats
 from .graph import Graph, to_ell_fast
+from ..kernels.spec import KernelSpec, as_kernel_spec
 
 MODES = ("sync", "async", "distributed")
 IMPLS = ("ref", "pallas")
@@ -49,9 +51,15 @@ class ExecutionPolicy:
     mode:  "sync" (BSP/Jacobi baseline) | "async" (the paper's self-timed
            cluster-dataflow engine) | "distributed" (shard_map halo-
            exchange engine over the 2-D ("graph", "query") mesh).
-    impl:  "ref" (XLA-fused jnp) | "pallas" (Mosaic kernel; interpret
-           mode off-TPU).  The distributed engine always uses "ref"
-           (Pallas calls cannot be SPMD-partitioned across host meshes).
+    kernel:  a ``kernels.spec.KernelSpec`` — which kernel runs the
+           sweeps and how (impl, block_size, rows_per_step,
+           fuse_frontier, autotune).  None derives one from ``impl``.
+           The distributed engine requires the "ref" kernel (Pallas
+           calls cannot be SPMD-partitioned across host meshes).
+    impl:  DEPRECATED alias for ``kernel=KernelSpec(impl=...)`` — "ref"
+           (XLA-fused jnp) | "pallas" (Mosaic kernel; interpret mode
+           off-TPU).  After construction ``impl`` always equals
+           ``kernel.impl`` (both spellings compare/hash consistently).
     query_axis:  batched-distributed mesh factorization.  None (default)
            auto-factors the device count against the batch size
            (``placement.factor_query_axis``); an int >= 1 pins the
@@ -69,19 +77,46 @@ class ExecutionPolicy:
     """
 
     mode: str = "async"
-    impl: str = "ref"
+    impl: Optional[str] = None
     damping: float = 0.85
     tol: float = 1e-6
     max_sweeps: int = 10_000
     query_axis: Optional[int] = None
     dist_flavor: str = "sync"
     local_sweeps: int = 1
+    kernel: Optional[KernelSpec] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}: {self.mode!r}")
-        if self.impl not in IMPLS:
-            raise ValueError(f"impl must be one of {IMPLS}: {self.impl!r}")
+        # normalize the (impl, kernel) pair: afterwards kernel is always a
+        # KernelSpec and impl mirrors kernel.impl, so the deprecated and
+        # structured spellings compare/hash equal.
+        if self.kernel is not None and not isinstance(self.kernel,
+                                                      KernelSpec):
+            object.__setattr__(self, "kernel", as_kernel_spec(self.kernel))
+        if self.kernel is None:
+            impl = self.impl if self.impl is not None else "ref"
+            if impl == "pallas":
+                warnings.warn(
+                    "ExecutionPolicy(impl='pallas') is deprecated; pass "
+                    "kernel=KernelSpec(impl='pallas', ...) to reach the "
+                    "tiling/fusion/autotune surface",
+                    DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "kernel", KernelSpec(impl=impl))
+            object.__setattr__(self, "impl", impl)
+        else:
+            if self.impl is not None and self.impl != self.kernel.impl:
+                raise ValueError(
+                    f"impl={self.impl!r} conflicts with kernel.impl="
+                    f"{self.kernel.impl!r}; set only kernel= (impl= is "
+                    "the deprecated alias)")
+            object.__setattr__(self, "impl", self.kernel.impl)
+        if self.mode == "distributed" and self.kernel.impl != "ref":
+            raise ValueError(
+                "the distributed engine shard_maps the ref kernel; "
+                "Pallas calls cannot be SPMD-partitioned — use "
+                "mode='sync'/'async' for kernel.impl='pallas'")
         if self.query_axis is not None and self.query_axis < 0:
             raise ValueError(
                 "query_axis must be None (auto), 0 (per-source "
@@ -109,7 +144,15 @@ class ExecutionPolicy:
                 "async flavor; use query_axis=None or a mesh extent")
 
     def but(self, **kw) -> "ExecutionPolicy":
-        """Copy with overrides (policy objects are frozen)."""
+        """Copy with overrides (policy objects are frozen).
+
+        Overriding ``impl=`` or ``kernel=`` alone re-derives the other
+        half of the normalized pair, so single-field overrides never
+        trip the impl/kernel conflict check."""
+        if "impl" in kw and "kernel" not in kw:
+            kw["kernel"] = None
+        elif "kernel" in kw and "impl" not in kw:
+            kw["impl"] = None
         return dataclasses.replace(self, **kw)
 
 
@@ -130,6 +173,11 @@ class PlanKey:
     num_clusters: Optional[int]
     clustered: bool
     seed: int = 0         # clustering seed (part of plan identity)
+    # Prepared images are kernel-agnostic and keyed with kernel=None (the
+    # base key — existing stores stay valid); autotune records are keyed
+    # by replace(base_key, kernel=requesting_spec), so tunings ride the
+    # same (fingerprint, PlanKey) scheme without duplicating plans.
+    kernel: Optional[KernelSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,8 +307,10 @@ class GraphProcessor:
         self.policy = policy or ExecutionPolicy()
         self.store = store
         self._plans: Dict[PlanKey, Prepared] = {}
+        self._tunings: Dict[PlanKey, dict] = {}  # session-local fallback
         self._variants: Dict[str, Graph] = {"base": g}
         self._prepare_calls = 0
+        self._autotune_calls = 0
 
     # -- compile-time pipeline (cached) ---------------------------------
 
@@ -284,12 +334,15 @@ class GraphProcessor:
                        self.num_clusters, self.clustered, self.seed)
 
     def prepare(self, semiring: str, variant: str = "base",
-                pull: bool = True, normalize: Optional[str] = None
-                ) -> Prepared:
+                pull: bool = True, normalize: Optional[str] = None,
+                kernel: Optional[KernelSpec] = None) -> Prepared:
         """Fetch (or build and cache) the Prepared image for a plan.
 
         With an injected store the lookup (and LRU/byte accounting) is
         delegated; without one, plans live in a session-local dict.
+        Passing a ``kernel`` with ``autotune=True`` also runs (or
+        fetches) the measured tuning sweep now, so the first query pays
+        no calibration latency.
         """
         key = self.plan_key(semiring, variant, pull, normalize)
         if self.store is not None:
@@ -298,12 +351,14 @@ class GraphProcessor:
                 self._prepare_calls += 1
                 p = self._build(semiring, variant, pull, normalize)
                 self.store.put(self.g.fingerprint(), key, p)
-            return p
-        p = self._plans.get(key)
-        if p is None:
-            self._prepare_calls += 1
-            p = self._build(semiring, variant, pull, normalize)
-            self._plans[key] = p
+        else:
+            p = self._plans.get(key)
+            if p is None:
+                self._prepare_calls += 1
+                p = self._build(semiring, variant, pull, normalize)
+                self._plans[key] = p
+        if kernel is not None and kernel.autotune:
+            self._ensure_tuning(p, key, kernel)
         return p
 
     def _build(self, semiring: str, variant: str, pull: bool,
@@ -316,10 +371,45 @@ class GraphProcessor:
     def cache_info(self) -> dict:
         info = {"plans": len(self._plans),
                 "prepare_calls": self._prepare_calls,
+                "autotune_calls": self._autotune_calls,
+                "tunings": len(self._tunings),
                 "keys": list(self._plans)}
         if self.store is not None:
             info["store"] = self.store.stats()
         return info
+
+    # -- measured kernel tunings (cached beside the plan) ----------------
+
+    def _ensure_tuning(self, p: Prepared, key: PlanKey,
+                       spec: KernelSpec) -> dict:
+        """Fetch-or-measure the tuning record for (plan, spec).  Records
+        ride the plan store's ``(fingerprint, PlanKey)`` scheme under
+        ``replace(base_key, kernel=spec)`` so warm restarts reuse them;
+        without a store they live for the session."""
+        from ..kernels import autotune as at
+        tkey = dataclasses.replace(key, kernel=spec)
+        if self.store is not None and hasattr(self.store, "get_tuning"):
+            fp = self.g.fingerprint()
+            rec = self.store.get_tuning(fp, tkey)
+            if rec is None:
+                self._autotune_calls += 1
+                rec = at.autotune_spmv(p, spec, seed=self.seed)
+                self.store.put_tuning(fp, tkey, rec)
+            return rec
+        rec = self._tunings.get(tkey)
+        if rec is None:
+            self._autotune_calls += 1
+            rec = at.autotune_spmv(p, spec, seed=self.seed)
+            self._tunings[tkey] = rec
+        return rec
+
+    def _kernel_for_run(self, p: Prepared, key: PlanKey,
+                        spec: KernelSpec) -> KernelSpec:
+        """The concrete spec a query executes: autotuned knobs filled in
+        from the cached (or freshly measured) tuning record."""
+        if spec.impl != "pallas" or not spec.autotune:
+            return spec
+        return spec.concrete(self._ensure_tuning(p, key, spec))
 
     # -- unified run entry point ----------------------------------------
 
@@ -342,13 +432,15 @@ class GraphProcessor:
             return self._minitri()
         if spec.algo == "dfs":
             return self._dfs(spec.sources[0])
-        p, x0f, pad, apply_kind, post = self._relaxation_setup(spec)
+        p, key, x0f, pad, apply_kind, post = self._relaxation_setup(spec)
+        kern = self._kernel_for_run(p, key, pol.kernel)
         if spec.batched:
             return self._run_batched(spec, pol, p, x0f, pad, apply_kind,
-                                     post)
+                                     post, kern)
         src = spec.sources[0] if spec.sources else None
         x0 = p.to_blocks(x0f(src), pad)
-        x, stats, extra = self._dispatch(pol, p, x0, apply_kind, src)
+        x, stats, extra = self._dispatch(pol, p, x0, apply_kind, src,
+                                         kern)
         values = post(p.from_blocks(x))
         extra = dict(extra, algo=spec.algo,
                      **({"src": src} if src is not None else {}))
@@ -357,10 +449,13 @@ class GraphProcessor:
     # -- per-algorithm plan + frontier-init descriptors ------------------
 
     def _relaxation_setup(self, spec: QuerySpec):
-        """Returns (Prepared, x0_builder(src), pad, apply_kind, post)."""
+        """Returns (Prepared, PlanKey, x0_builder(src), pad, apply_kind,
+        post)."""
         algo = spec.algo
         n = self.g.n
         if algo == "pagerank":
+            key = self.plan_key("plus_times",
+                                normalize="out_stochastic")
             p = self.prepare("plus_times", normalize="out_stochastic")
 
             def x0f(_):
@@ -369,25 +464,28 @@ class GraphProcessor:
             def post(v):
                 return v / max(v.sum(), 1e-30)  # dangling-drop: L1 renorm
 
-            return p, x0f, 0.0, "pagerank", post
+            return p, key, x0f, 0.0, "pagerank", post
         if algo in ("sssp", "bfs"):
-            p = self.prepare("min_plus",
-                             variant="base" if algo == "sssp" else "unit")
+            variant = "base" if algo == "sssp" else "unit"
+            key = self.plan_key("min_plus", variant=variant)
+            p = self.prepare("min_plus", variant=variant)
 
             def x0f(src):
                 x = np.full(n, np.inf, dtype=np.float32)
                 x[src] = 0.0
                 return x
 
-            return p, x0f, np.inf, "relax", lambda v: v
+            return p, key, x0f, np.inf, "relax", lambda v: v
         if algo == "cc":
+            key = self.plan_key("min_select", variant="undirected")
             p = self.prepare("min_select", variant="undirected")
 
             def x0f(_):
                 return p.perm.astype(np.float32)
 
-            return p, x0f, np.inf, "relax", lambda v: v
+            return p, key, x0f, np.inf, "relax", lambda v: v
         if algo == "reachability":
+            key = self.plan_key("max_min", variant="unit")
             p = self.prepare("max_min", variant="unit")
 
             def x0f(src):
@@ -395,7 +493,7 @@ class GraphProcessor:
                 x[src] = 1.0
                 return x
 
-            return p, x0f, 0.0, "relax", lambda v: v
+            return p, key, x0f, 0.0, "relax", lambda v: v
         raise ValueError(f"unknown algorithm {spec.algo!r}")
 
     def _frontier(self, p: Prepared, src: Optional[int]) -> jnp.ndarray:
@@ -410,14 +508,18 @@ class GraphProcessor:
     # -- engine dispatch -------------------------------------------------
 
     def _dispatch(self, pol: ExecutionPolicy, p: Prepared, x0,
-                  apply_kind: str, src: Optional[int]):
+                  apply_kind: str, src: Optional[int],
+                  kern: Optional[KernelSpec] = None):
+        kern = kern if kern is not None else pol.kernel
         kw = dict(apply_kind=apply_kind, damping=pol.damping, tol=pol.tol,
                   max_sweeps=pol.max_sweeps)
         if pol.mode == "sync":
-            x, stats = eng.run_sync(p, x0, impl=pol.impl, **kw)
+            ch0 = self._frontier(p, src) if kern.fuse_frontier else None
+            x, stats = eng.run_sync(p, x0, kernel=kern, changed0=ch0,
+                                    **kw)
             return x, stats, {}
         if pol.mode == "async":
-            x, stats = eng.run_async(p, x0, impl=pol.impl,
+            x, stats = eng.run_async(p, x0, kernel=kern,
                                      changed0=self._frontier(p, src), **kw)
             return x, stats, {}
         # distributed: shard_map engine over the device mesh (ref
@@ -437,7 +539,9 @@ class GraphProcessor:
         return x, stats, {"dist": dist}
 
     def _run_batched(self, spec: QuerySpec, pol: ExecutionPolicy,
-                     p: Prepared, x0f, pad, apply_kind, post) -> Result:
+                     p: Prepared, x0f, pad, apply_kind, post,
+                     kern: Optional[KernelSpec] = None) -> Result:
+        kern = kern if kern is not None else pol.kernel
         sources = list(spec.sources)
         if not sources:
             raise ValueError("batched query needs at least one source")
@@ -475,12 +579,14 @@ class GraphProcessor:
                           graph=self.g)
         x0 = jnp.stack([p.to_blocks(x0f(s), pad) for s in sources])
         kw = dict(apply_kind=apply_kind, damping=pol.damping, tol=pol.tol,
-                  max_sweeps=pol.max_sweeps, impl=pol.impl)
+                  max_sweeps=pol.max_sweeps, kernel=kern)
         if pol.mode == "async":
             ch0 = jnp.stack([self._frontier(p, s) for s in sources])
             x, stats = eng.run_async_batched(p, x0, changed0=ch0, **kw)
         else:
-            x, stats = eng.run_sync_batched(p, x0, **kw)
+            ch0 = (jnp.stack([self._frontier(p, s) for s in sources])
+                   if kern.fuse_frontier else None)
+            x, stats = eng.run_sync_batched(p, x0, changed0=ch0, **kw)
         values = np.stack([post(p.from_blocks(x[q]))
                            for q in range(len(sources))])
         extra = {"algo": spec.algo, "sources": sources}

@@ -63,8 +63,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from . import semiring as sr
 from .engine import Prepared, _apply
 from .placement import (DistStats, ShardedBatch,  # noqa: F401 (re-export)
-                        _shard_map, shard_batched_inputs)
-from ..kernels import ref as kref
+                        _shard_map, _spmv_ref, shard_batched_inputs)
 
 
 def distributed_async_run_batched(
@@ -125,8 +124,9 @@ def distributed_async_run_batched(
         # boundary rows read garbage through the clip and are masked out
         cols_rel = jnp.clip(cols_l - row0, 0, max(rl - 1, 0))
 
-        spmv = jax.vmap(lambda cols, xq: kref.bsr_spmv_ref(
-            vals_l, cols, xq, p.semiring), in_axes=(None, 0))
+        spmv = jax.vmap(lambda cols, xq: _spmv_ref(
+            vals_l, cols, nnz_l, xq, semiring=p.semiring),
+            in_axes=(None, 0))
 
         def gather_halo(x):
             # tiled all_gather along "graph": two buffers per round so

@@ -36,6 +36,7 @@ from . import semiring as sr
 from .cluster import Clustering, cluster_graph, identity_clustering
 from .graph import Graph, to_bsr
 from ..kernels import ops
+from ..kernels.spec import KernelSpec, as_kernel_spec
 
 
 @dataclasses.dataclass
@@ -51,6 +52,9 @@ class Prepared:
     group_tiles: jnp.ndarray  # (S,) f32
     group_edges: jnp.ndarray  # (S,) f32
     group_ext_tiles: jnp.ndarray  # (S,) f32 — tiles reading outside group
+    row_edges: jnp.ndarray  # (r_pad,) f32 — true edges per row-block
+    row_ext: jnp.ndarray    # (r_pad,) f32 — tiles reading outside the
+    #                         row's group (fused-path halo accounting)
     # host metadata
     n: int
     b: int
@@ -81,9 +85,8 @@ class Prepared:
         """Footprint of the plan (device tile image + host metadata) —
         the unit of the plan store's byte budget.  Metadata-only: jax
         arrays report nbytes without a device-to-host transfer."""
-        dev = sum(int(a.nbytes) for a in (
-            self.vals, self.cols, self.nnz, self.valid, self.dangling,
-            self.group_tiles, self.group_edges, self.group_ext_tiles))
+        dev = sum(int(getattr(self, f).nbytes)
+                  for f in _PREPARED_DEVICE_FIELDS)
         host = int(self.perm.nbytes) + int(self.inv_perm.nbytes) + \
             int(self.clustering.assign.nbytes) + \
             int(self.clustering.perm.nbytes)
@@ -97,7 +100,8 @@ class Prepared:
 
 _PREPARED_DEVICE_FIELDS = (
     "vals", "cols", "nnz", "valid", "dangling",
-    "group_tiles", "group_edges", "group_ext_tiles")
+    "group_tiles", "group_edges", "group_ext_tiles",
+    "row_edges", "row_ext")
 _PREPARED_HOST_FIELDS = (
     "n", "b", "r_pad", "k_max", "gb", "s", "semiring",
     "perm", "inv_perm", "clustering", "tiles_total", "edges_total")
@@ -161,7 +165,7 @@ jax.tree_util.register_pytree_node(
 # restart deserializes this instead of re-running the whole compile
 # pipeline (profile → cluster → analyze → place → BSR build).
 
-PREPARED_FORMAT_VERSION = 1
+PREPARED_FORMAT_VERSION = 2  # v2: + row_edges/row_ext (fused-path counters)
 
 
 def serialize_prepared(p: Prepared) -> bytes:
@@ -263,6 +267,7 @@ def prepare(g: Graph, semiring_name: str, b: int = 32,
           (np.arange(k)[None, :] < nnz[:, None])
     group_ext_tiles = np.zeros(s, dtype=np.float64)
     np.add.at(group_ext_tiles, grp, ext.sum(axis=1))
+    row_ext = ext.sum(axis=1).astype(np.float64)
 
     return Prepared(
         vals=jnp.asarray(vals), cols=jnp.asarray(cols), nnz=jnp.asarray(nnz),
@@ -270,6 +275,8 @@ def prepare(g: Graph, semiring_name: str, b: int = 32,
         group_tiles=jnp.asarray(group_tiles, jnp.float32),
         group_edges=jnp.asarray(group_edges, jnp.float32),
         group_ext_tiles=jnp.asarray(group_ext_tiles, jnp.float32),
+        row_edges=jnp.asarray(edge_nnz, jnp.float32),
+        row_ext=jnp.asarray(row_ext, jnp.float32),
         n=n, b=b, r_pad=r_pad, k_max=k, gb=gb, s=s,
         semiring=semiring_name, perm=np.asarray(c.perm),
         inv_perm=np.argsort(np.asarray(c.perm)), clustering=c,
@@ -365,11 +372,20 @@ def dist_run_stats(p: Prepared, dist, mode: str = "distributed"
 # ---------------------------------------------------------------------------
 
 
+def _resolve_kernel(kernel, impl: str) -> KernelSpec:
+    """Resolve the runner-level ``kernel=``/legacy ``impl=`` pair into
+    one KernelSpec (``kernel`` wins when given)."""
+    if kernel is not None:
+        return as_kernel_spec(kernel)
+    return KernelSpec(impl=impl)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "semiring_name", "apply_kind", "max_sweeps", "impl"))
+    "semiring_name", "apply_kind", "max_sweeps", "kernel"))
 def _sync_loop(vals, cols, nnz, valid, dangling, x0, damping, tol, inv_n,
-               semiring_name, apply_kind, max_sweeps, impl):
+               semiring_name, apply_kind, max_sweeps, kernel):
     ring = sr.get(semiring_name)
+    spmv = ops.select_kernel("bsr_spmv", kernel)
 
     def cond(st):
         i, x, done = st
@@ -377,8 +393,7 @@ def _sync_loop(vals, cols, nnz, valid, dangling, x0, damping, tol, inv_n,
 
     def body(st):
         i, x, _ = st
-        y = ops.bsr_spmv(vals, cols, nnz, x, semiring=semiring_name,
-                         impl=impl)
+        y = spmv(vals, cols, nnz, x, semiring=semiring_name)
         x_new, imp = _apply(apply_kind, ring, y, x, valid, damping, inv_n,
                             tol)
         return i + 1, x_new, ~jnp.any(imp)
@@ -387,14 +402,94 @@ def _sync_loop(vals, cols, nnz, valid, dangling, x0, damping, tol, inv_n,
     return i, x, done
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "semiring_name", "apply_kind", "max_sweeps", "gb", "s", "kernel"))
+def _sync_loop_fused(vals, cols, nnz, valid, row_edges, row_ext, x0,
+                     changed0, damping, tol, inv_n, semiring_name,
+                     apply_kind, max_sweeps, gb, s, kernel):
+    """Jacobi sweep via the fused kernel: each sweep builds the active
+    row-block set from the change flags (a row is live iff one of its
+    live input tiles changed last sweep), hands the compact list to the
+    fused relax+select+reduce kernel, and consumes the kernel's own
+    convergence flag — no separate XLA apply/reduce.
+
+    Exactness: with ``act`` built this way, skipped rows provably cannot
+    improve (their inputs are bitwise-unchanged), so the trajectory —
+    values AND sweep count — matches the unfused path.  Bias apply kinds
+    (pagerank/identity) must touch every valid row once, on sweep 0.
+    """
+    spmv = ops.select_kernel("bsr_spmv", kernel)
+    k = cols.shape[1]
+    lane = jnp.arange(k)[None, :]
+    live = lane < nnz[:, None]
+    nnz_f = nnz.astype(jnp.float32)
+    bias = apply_kind in ("pagerank", "identity")
+    valid_rows = jnp.any(valid, axis=1)
+
+    def cond(st):
+        i, x, ch, done, c = st
+        return (~done) & (i < max_sweeps)
+
+    def body(st):
+        i, x, ch, _, c = st
+        act = jnp.any(ch[cols] & live, axis=1)
+        if bias:
+            act = act | ((i == 0) & valid_rows)
+        x, ch, imp_any = spmv(vals, cols, nnz, x, x, valid, act, damping,
+                              tol, inv_n, semiring=semiring_name,
+                              apply_kind=apply_kind)
+        af = act.astype(jnp.float32)
+        g_tiles = (af * nnz_f).reshape(s, gb).sum(axis=1)
+        c = dict(
+            c,
+            tile_work=c["tile_work"] + jnp.sum(af * nnz_f),
+            edge_work=c["edge_work"] + jnp.sum(af * row_edges),
+            halo=c["halo"] + jnp.sum(af * row_ext),
+            active=c["active"] + jnp.sum(
+                jnp.any(act.reshape(s, gb), axis=1).astype(jnp.float32)),
+            crit=c["crit"] + jnp.max(g_tiles))
+        return i + 1, x, ch, ~imp_any, c
+
+    counters0 = dict(tile_work=jnp.float32(0), edge_work=jnp.float32(0),
+                     halo=jnp.float32(0), active=jnp.float32(0),
+                     crit=jnp.float32(0))
+    i, x, ch, done, c = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), x0, changed0, False, counters0))
+    return i, x, done, c
+
+
+def _counter_stats(p: Prepared, sweeps: int, converged: bool, c: dict,
+                   mode: str) -> RunStats:
+    """RunStats from measured per-sweep counters (fused paths); batched
+    callers pass summed arrays, so reduce with numpy."""
+    return RunStats(
+        sweeps=sweeps, converged=converged,
+        tile_work=float(np.asarray(c["tile_work"]).sum()),
+        edge_work=float(np.asarray(c["edge_work"]).sum()),
+        crit_tiles=float(np.asarray(c["crit"]).max(initial=0.0)),
+        active_group_sweeps=float(np.asarray(c["active"]).sum()),
+        halo_tiles=float(np.asarray(c["halo"]).sum()),
+        total_groups=p.s, mode=mode)
+
+
 def run_sync(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
              damping: float = 0.85, tol: float = 1e-6,
-             max_sweeps: int = 10_000, impl: str = "ref"
+             max_sweeps: int = 10_000, impl: str = "ref", kernel=None,
+             changed0: Optional[jnp.ndarray] = None
              ) -> Tuple[jnp.ndarray, RunStats]:
+    spec = _resolve_kernel(kernel, impl)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
+    if spec.fuse_frontier:
+        if changed0 is None:
+            changed0 = jnp.ones(p.r_pad, dtype=bool)
+        i, x, done, c = _sync_loop_fused(
+            p.vals, p.cols, p.nnz, p.valid, p.row_edges, p.row_ext, x0,
+            changed0, jnp.float32(damping), jnp.float32(tol), inv_n,
+            p.semiring, apply_kind, max_sweeps, p.gb, p.s, spec)
+        return x, _counter_stats(p, int(i), bool(done), c, "sync")
     i, x, done = _sync_loop(p.vals, p.cols, p.nnz, p.valid, p.dangling, x0,
                             jnp.float32(damping), jnp.float32(tol), inv_n,
-                            p.semiring, apply_kind, max_sweeps, impl)
+                            p.semiring, apply_kind, max_sweeps, spec)
     return x, bsp_stats(p, int(i), bool(done), "sync")
 
 
@@ -404,11 +499,14 @@ def run_sync(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "semiring_name", "apply_kind", "max_sweeps", "gb", "s", "impl"))
+    "semiring_name", "apply_kind", "max_sweeps", "gb", "s", "kernel"))
 def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
-                group_ext, x0, changed0, damping, tol, inv_n,
-                semiring_name, apply_kind, max_sweeps, gb, s, impl):
+                group_ext, row_edges, row_ext, x0, changed0, damping, tol,
+                inv_n, semiring_name, apply_kind, max_sweeps, gb, s,
+                kernel):
     ring = sr.get(semiring_name)
+    spmv = ops.select_kernel("bsr_spmv", kernel)
+    fused = kernel.fuse_frontier
     k = cols.shape[1]
     lane = jnp.arange(k)[None, :]
 
@@ -430,17 +528,29 @@ def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
         active = jnp.any(ch[cols_g] & live)
         if first_touch:
             active = active | ~ran[sidx]
+        if fused:
+            # row-granular frontier inside the group: the kernel's active
+            # list skips the group's untouched row-blocks entirely.
+            vg = jax.lax.dynamic_slice_in_dim(valid, row0, gb, 0)
+            act_rows = jnp.any(ch[cols_g] & live, axis=1)
+            if first_touch:
+                act_rows = act_rows | (~ran[sidx] & jnp.any(vg, axis=1))
 
         def do(args):
             x, ch_next = args
-            y = ops.bsr_spmv(vals_g, cols_g, nnz_g, x,
-                             semiring=semiring_name, impl=impl)
             xg = jax.lax.dynamic_slice_in_dim(x, row0, gb, 0)
             vg = jax.lax.dynamic_slice_in_dim(valid, row0, gb, 0)
-            x_new, imp = _apply(apply_kind, ring, y, xg, vg, damping,
-                                inv_n, tol)
+            if fused:
+                x_new, imp_rows, _ = spmv(
+                    vals_g, cols_g, nnz_g, x, xg, vg, act_rows, damping,
+                    tol, inv_n, semiring=semiring_name,
+                    apply_kind=apply_kind)
+            else:
+                y = spmv(vals_g, cols_g, nnz_g, x, semiring=semiring_name)
+                x_new, imp = _apply(apply_kind, ring, y, xg, vg, damping,
+                                    inv_n, tol)
+                imp_rows = jnp.any(imp, axis=1)
             x = jax.lax.dynamic_update_slice_in_dim(x, x_new, row0, 0)
-            imp_rows = jnp.any(imp, axis=1)
             ch_next = jax.lax.dynamic_update_slice_in_dim(
                 ch_next, imp_rows, row0, 0)
             return x, ch_next
@@ -448,14 +558,25 @@ def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
         x, ch_next = jax.lax.cond(active, do, lambda a: a, (x, ch_next))
         ran = ran.at[sidx].set(ran[sidx] | active)
         af = active.astype(jnp.float32)
+        if fused:
+            # charge only the rows the kernel actually walked
+            arf = act_rows.astype(jnp.float32)
+            g_tiles = jnp.sum(arf * nnz_g.astype(jnp.float32))
+            g_edges = jnp.sum(
+                arf * jax.lax.dynamic_slice_in_dim(row_edges, row0, gb, 0))
+            g_halo = jnp.sum(
+                arf * jax.lax.dynamic_slice_in_dim(row_ext, row0, gb, 0))
+        else:
+            g_tiles = af * group_tiles[sidx]
+            g_edges = af * group_edges[sidx]
+            g_halo = af * group_ext[sidx]
         counters = dict(
             counters,
-            tile_work=counters["tile_work"] + af * group_tiles[sidx],
-            edge_work=counters["edge_work"] + af * group_edges[sidx],
-            halo=counters["halo"] + af * group_ext[sidx],
+            tile_work=counters["tile_work"] + g_tiles,
+            edge_work=counters["edge_work"] + g_edges,
+            halo=counters["halo"] + g_halo,
             active=counters["active"] + af,
-            sweep_max=jnp.maximum(counters["sweep_max"],
-                                  af * group_tiles[sidx]))
+            sweep_max=jnp.maximum(counters["sweep_max"], g_tiles))
         return (x, ch_prev, ch_next, ran, counters), None
 
     def cond(st):
@@ -486,23 +607,18 @@ def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
 def run_async(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
               damping: float = 0.85, tol: float = 1e-6,
               max_sweeps: int = 10_000,
-              changed0: Optional[jnp.ndarray] = None, impl: str = "ref"
-              ) -> Tuple[jnp.ndarray, RunStats]:
+              changed0: Optional[jnp.ndarray] = None, impl: str = "ref",
+              kernel=None) -> Tuple[jnp.ndarray, RunStats]:
+    spec = _resolve_kernel(kernel, impl)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     if changed0 is None:
         changed0 = jnp.ones(p.r_pad, dtype=bool)
     i, x, done, c = _async_loop(
         p.vals, p.cols, p.nnz, p.valid, p.dangling, p.group_tiles,
-        p.group_edges, p.group_ext_tiles, x0, changed0,
-        jnp.float32(damping), jnp.float32(tol), inv_n, p.semiring,
-        apply_kind, max_sweeps, p.gb, p.s, impl)
-    stats = RunStats(
-        sweeps=int(i), converged=bool(done),
-        tile_work=float(c["tile_work"]), edge_work=float(c["edge_work"]),
-        crit_tiles=float(c["crit"]),
-        active_group_sweeps=float(c["active"]),
-        halo_tiles=float(c["halo"]), total_groups=p.s, mode="async")
-    return x, stats
+        p.group_edges, p.group_ext_tiles, p.row_edges, p.row_ext, x0,
+        changed0, jnp.float32(damping), jnp.float32(tol), inv_n,
+        p.semiring, apply_kind, max_sweeps, p.gb, p.s, spec)
+    return x, _counter_stats(p, int(i), bool(done), c, "async")
 
 
 # ---------------------------------------------------------------------------
@@ -520,14 +636,32 @@ def run_async(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
 def run_sync_batched(p: Prepared, x0: jnp.ndarray,
                      apply_kind: str = "relax", damping: float = 0.85,
                      tol: float = 1e-6, max_sweeps: int = 10_000,
-                     impl: str = "ref") -> Tuple[jnp.ndarray, RunStats]:
+                     impl: str = "ref", kernel=None,
+                     changed0: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, RunStats]:
     """x0: (Q, r_pad, B) — returns ((Q, r_pad, B), aggregate RunStats)."""
+    spec = _resolve_kernel(kernel, impl)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
+
+    if spec.fuse_frontier:
+        if changed0 is None:
+            changed0 = jnp.ones((x0.shape[0], p.r_pad), dtype=bool)
+
+        def one_fused(x0q, ch0q):
+            return _sync_loop_fused(
+                p.vals, p.cols, p.nnz, p.valid, p.row_edges, p.row_ext,
+                x0q, ch0q, jnp.float32(damping), jnp.float32(tol), inv_n,
+                p.semiring, apply_kind, max_sweeps, p.gb, p.s, spec)
+
+        i, x, done, c = jax.vmap(one_fused)(x0, changed0)
+        sweeps = np.asarray(i)
+        return x, _counter_stats(p, int(sweeps.max(initial=0)),
+                                 bool(np.all(done)), c, "sync")
 
     def one(x0q):
         return _sync_loop(p.vals, p.cols, p.nnz, p.valid, p.dangling, x0q,
                           jnp.float32(damping), jnp.float32(tol), inv_n,
-                          p.semiring, apply_kind, max_sweeps, impl)
+                          p.semiring, apply_kind, max_sweeps, spec)
 
     i, x, done = jax.vmap(one)(x0)
     sweeps = np.asarray(i)
@@ -539,8 +673,10 @@ def run_async_batched(p: Prepared, x0: jnp.ndarray,
                       apply_kind: str = "relax", damping: float = 0.85,
                       tol: float = 1e-6, max_sweeps: int = 10_000,
                       changed0: Optional[jnp.ndarray] = None,
-                      impl: str = "ref") -> Tuple[jnp.ndarray, RunStats]:
+                      impl: str = "ref", kernel=None
+                      ) -> Tuple[jnp.ndarray, RunStats]:
     """x0: (Q, r_pad, B); changed0: optional (Q, r_pad) per-query frontier."""
+    spec = _resolve_kernel(kernel, impl)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     if changed0 is None:
         changed0 = jnp.ones((x0.shape[0], p.r_pad), dtype=bool)
@@ -548,18 +684,11 @@ def run_async_batched(p: Prepared, x0: jnp.ndarray,
     def one(x0q, ch0q):
         return _async_loop(
             p.vals, p.cols, p.nnz, p.valid, p.dangling, p.group_tiles,
-            p.group_edges, p.group_ext_tiles, x0q, ch0q,
-            jnp.float32(damping), jnp.float32(tol), inv_n, p.semiring,
-            apply_kind, max_sweeps, p.gb, p.s, impl)
+            p.group_edges, p.group_ext_tiles, p.row_edges, p.row_ext,
+            x0q, ch0q, jnp.float32(damping), jnp.float32(tol), inv_n,
+            p.semiring, apply_kind, max_sweeps, p.gb, p.s, spec)
 
     i, x, done, c = jax.vmap(one)(x0, changed0)
     sweeps = np.asarray(i)
-    stats = RunStats(
-        sweeps=int(sweeps.max(initial=0)), converged=bool(np.all(done)),
-        tile_work=float(np.asarray(c["tile_work"]).sum()),
-        edge_work=float(np.asarray(c["edge_work"]).sum()),
-        crit_tiles=float(np.asarray(c["crit"]).max(initial=0.0)),
-        active_group_sweeps=float(np.asarray(c["active"]).sum()),
-        halo_tiles=float(np.asarray(c["halo"]).sum()),
-        total_groups=p.s, mode="async")
-    return x, stats
+    return x, _counter_stats(p, int(sweeps.max(initial=0)),
+                             bool(np.all(done)), c, "async")

@@ -36,7 +36,13 @@ if _shard_map is None:  # pragma: no cover - version dependent
 
 from . import semiring as sr
 from .engine import Prepared, _apply
-from ..kernels import ref as kref
+from ..kernels import ops
+from ..kernels.spec import KernelSpec
+
+# the distributed engines shard_map the ref kernel (Pallas calls cannot
+# be SPMD-partitioned); resolved once through the same registry the
+# local engines use
+_spmv_ref = ops.select_kernel("bsr_spmv", KernelSpec(impl="ref"))
 
 
 def make_graph_mesh(num_devices: Optional[int] = None,
@@ -215,7 +221,7 @@ def distributed_sync_run(
         def body(st):
             i, x_loc, _ = st
             xg = jax.lax.all_gather(x_loc, "graph", tiled=True)
-            y = kref.bsr_spmv_ref(vals_l, cols_l, xg, p.semiring)
+            y = _spmv_ref(vals_l, cols_l, nnz_l, xg, semiring=p.semiring)
             x_new, imp = _apply(apply_kind, ring, y, x_loc, valid_l,
                                 damping, inv_n, tol)
             done = ~(jax.lax.psum(jnp.any(imp).astype(jnp.int32),
@@ -273,8 +279,8 @@ def distributed_sync_run_batched(
         out_specs=(P("query", "graph"), P("query"), P("query")),
         check_rep=False)
     def run(vals_l, cols_l, nnz_l, valid_l, x_l, qlive_l):
-        spmv = jax.vmap(
-            lambda xq: kref.bsr_spmv_ref(vals_l, cols_l, xq, p.semiring))
+        spmv = jax.vmap(lambda xq: _spmv_ref(vals_l, cols_l, nnz_l, xq,
+                                             semiring=p.semiring))
 
         def cond(st):
             i, x, done_q, sweeps_q, all_done = st
@@ -345,12 +351,13 @@ def lower_distributed(p: Prepared, mesh: Mesh, apply_kind: str = "relax",
         def sweep(vals_l, cols_l, nnz_l, valid_l, x_l):
             if batch:
                 xg = jax.lax.all_gather(x_l, "graph", axis=1, tiled=True)
-                y = jax.vmap(lambda xq: kref.bsr_spmv_ref(
-                    vals_l, cols_l, xq, p.semiring))(xg)
+                y = jax.vmap(lambda xq: _spmv_ref(
+                    vals_l, cols_l, nnz_l, xq, semiring=p.semiring))(xg)
                 valid_b = valid_l[None]
             else:
                 xg = jax.lax.all_gather(x_l, "graph", tiled=True)
-                y = kref.bsr_spmv_ref(vals_l, cols_l, xg, p.semiring)
+                y = _spmv_ref(vals_l, cols_l, nnz_l, xg,
+                              semiring=p.semiring)
                 valid_b = valid_l
             x_new, _ = _apply(apply_kind, ring, y, x_l, valid_b,
                               jnp.float32(0.85), jnp.float32(1.0 / p.n),

@@ -33,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _init_val(semiring: str) -> float:
@@ -65,45 +66,211 @@ def _acc(semiring: str, a, b):
     return jnp.maximum(a, b)
 
 
+def _gather_combine(semiring: str, bk: int, nnz, base, tile, cols, x_ref):
+    """Gather the source-node blocks for one (bk,) tile chunk and combine.
+    K is small (≤ bk), so an unrolled gather over bk dynamic row loads
+    maps to bk VMEM dynamic slices."""
+    xb = jnp.stack([pl.load(x_ref, (pl.dslice(cols[t], 1), slice(None)))[0]
+                    for t in range(bk)])  # (bk, B)
+    # mask padded lanes of the *final* chunk with ⊕-identity values —
+    # padding tiles already hold identities, but their gathered x could
+    # combine under min_select; keep it exact:
+    lane = jnp.arange(bk) + base
+    live = (lane < nnz)[:, None, None]
+    tile = jnp.where(live, tile, _init_val(semiring))
+    return _tile_combine(semiring, tile, xb)
+
+
 def _bsr_spmv_kernel(nnz_ref, cols_ref, vals_ref, x_ref, y_ref, *,
-                     semiring: str, bk: int):
+                     semiring: str, bk: int, rows_per_step: int):
     r, kc = pl.program_id(0), pl.program_id(1)
 
     @pl.when(kc == 0)
     def _():
         y_ref[...] = jnp.full_like(y_ref, _init_val(semiring))
 
-    # Self-timed bound: only true tiles are combined.  ``nnz`` comes from a
-    # (1,)-blocked spec so the scalar is already in SMEM-like storage.
-    nnz = nnz_ref[0]
     base = kc * bk
-    valid = jnp.clip(nnz - base, 0, bk)
+    for rr in range(rows_per_step):
+        # Self-timed bound: only true tiles are combined.  ``nnz`` comes
+        # from a blocked spec so the scalar is already in SMEM-like storage.
+        nnz = nnz_ref[rr]
+        valid = jnp.clip(nnz - base, 0, bk)
 
-    @pl.when(valid > 0)
-    def _():
-        # Gather the source-node blocks for this tile chunk.  K is small
-        # (≤ bk), so an unrolled gather over bk dynamic row loads maps to
-        # bk VMEM dynamic slices.
-        tile = vals_ref[0]          # (bk, B, B)
-        cols = cols_ref[0]          # (bk,)
-        xb = jnp.stack([pl.load(x_ref, (pl.dslice(cols[t], 1), slice(None)))[0]
-                        for t in range(bk)])  # (bk, B)
-        # mask padded lanes of the *final* chunk with ⊕-identity values —
-        # padding tiles already hold identities, but their gathered x could
-        # combine under min_select; keep it exact:
-        lane = jnp.arange(bk) + base
-        live = (lane < nnz)[:, None, None]
-        tile = jnp.where(live, tile, _init_val(semiring))
-        part = _tile_combine(semiring, tile, xb)
-        y_ref[0, :] = _acc(semiring, y_ref[0, :], part)
+        @pl.when(valid > 0)
+        def _(rr=rr, nnz=nnz):
+            part = _gather_combine(semiring, bk, nnz, base, vals_ref[rr],
+                                   cols_ref[rr], x_ref)
+            y_ref[rr, :] = _acc(semiring, y_ref[rr, :], part)
 
 
-@functools.partial(jax.jit, static_argnames=("semiring", "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "semiring", "bk", "rows_per_step", "interpret"))
 def bsr_spmv(block_vals: jnp.ndarray, block_cols: jnp.ndarray,
              block_nnz: jnp.ndarray, x: jnp.ndarray,
              semiring: str = "plus_times", bk: int = 8,
+             rows_per_step: int = 1,
              interpret: bool = True) -> jnp.ndarray:
-    """Pallas block-sparse semiring SpMV.  See module docstring for layout."""
+    """Pallas block-sparse semiring SpMV.  See module docstring for layout.
+
+    ``rows_per_step`` coarsens the grid: each step stages (and relaxes)
+    that many row-blocks, trading grid-step overhead for VMEM residency.
+    """
+    r, k, b, _ = block_vals.shape
+    rs = max(int(rows_per_step), 1)
+    if k % bk:
+        pad = bk - k % bk
+        block_vals = jnp.pad(block_vals, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                             constant_values=_init_val(semiring))
+        block_cols = jnp.pad(block_cols, ((0, 0), (0, pad)))
+        k += pad
+    r_out = r
+    if r % rs:
+        pad_r = rs - r % rs
+        block_vals = jnp.pad(block_vals, ((0, pad_r),) + ((0, 0),) * 3,
+                             constant_values=_init_val(semiring))
+        block_cols = jnp.pad(block_cols, ((0, pad_r), (0, 0)))
+        block_nnz = jnp.pad(block_nnz, (0, pad_r))  # nnz=0: never combined
+        r += pad_r
+    c = x.shape[0]
+    grid = (r // rs, k // bk)
+    y = pl.pallas_call(
+        functools.partial(_bsr_spmv_kernel, semiring=semiring, bk=bk,
+                          rows_per_step=rs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rs,), lambda r, kc: (r,)),                    # nnz
+            pl.BlockSpec((rs, bk), lambda r, kc: (r, kc)),              # cols
+            pl.BlockSpec((rs, bk, b, b), lambda r, kc: (r, kc, 0, 0)),  # vals
+            pl.BlockSpec((c, b), lambda r, kc: (0, 0)),                 # x
+        ],
+        out_specs=pl.BlockSpec((rs, b), lambda r, kc: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, b), jnp.float32),
+        interpret=interpret,
+    )(block_nnz, block_cols, block_vals.astype(jnp.float32),
+      x.astype(jnp.float32))
+    return y[:r_out] if r_out != r else y
+
+
+# ---------------------------------------------------------------------------
+# fused relax + frontier-select + convergence-reduce with active-tile skip
+# ---------------------------------------------------------------------------
+#
+# One kernel per sweep instead of SpMV + separate XLA apply/mask/reduce
+# ops.  Active-tile skipping: the caller passes the active row-block mask
+# (rows with at least one live tile reading a changed source block); the
+# wrapper compacts it into an index list prefetched as scalars, and the
+# grid walks ONLY those rows — the paper's self-timed "empty FIFO slots
+# cost nothing" at row-block granularity.  Grid steps beyond the active
+# count are clamped onto the last active row (same block index ⇒ Mosaic
+# re-fetches nothing) and fully predicated off with ``pl.when``.
+#
+# In-place frontier semantics: the output x aliases a *copy* of the input
+# row values, so rows absent from the active list pass through untouched,
+# while the kernel reads old values from the separate, unaliased full-x
+# operand — exact Jacobi, bit-identical to the unfused path (rows whose
+# inputs didn't change would recompute the same value anyway; idempotent
+# ⊕ covers self-value reads).
+
+# the update rules below mirror core/engine._apply op-for-op (same jnp
+# primitives ⇒ same lowering ⇒ bit-identical results); they live here
+# because kernels/ must not import core/ (core.__init__ imports engine,
+# which imports kernels.ops)
+
+
+def _improves(semiring: str, new, old):
+    if semiring == "plus_times":
+        return new != old
+    if semiring == "max_min":
+        return new > old
+    return new < old  # min_plus, min_select
+
+
+def _apply_rows(apply_kind: str, semiring: str, y, xg, vg, damping, inv_n,
+                tol):
+    """(x_new, improved) for one row-block; mirrors core/engine._apply."""
+    if apply_kind == "relax":
+        x_new = _acc(semiring, y, xg)   # _acc IS the ⊕ of the semiring
+        imp = _improves(semiring, x_new, xg)
+    elif apply_kind == "pagerank":
+        x_new = (1.0 - damping) * inv_n + damping * y
+        x_new = jnp.where(vg, x_new, 0.0)
+        imp = jnp.abs(x_new - xg) > tol
+    elif apply_kind == "identity":
+        x_new = jnp.where(vg, y, xg)
+        imp = _improves(semiring, x_new, xg)
+    else:
+        raise ValueError(apply_kind)
+    x_new = jnp.where(vg, x_new, xg)
+    imp = imp & vg
+    return x_new, imp
+
+
+def _fused_kernel(na_ref, al_ref, nnz_ref, cols_ref, vals_ref, x_ref,
+                  xg_ref, valid_ref, par_ref, xa_ref, ch0_ref,
+                  xo_ref, cho_ref, conv_ref, *,
+                  semiring: str, apply_kind: str, bk: int, nk: int):
+    i, kc = pl.program_id(0), pl.program_id(1)
+    del xa_ref, ch0_ref  # aliased output bases; never read in-kernel
+
+    @pl.when((i == 0) & (kc == 0))
+    def _():
+        conv_ref[0] = False
+
+    live_step = i < na_ref[0]
+
+    # accumulate the ⊕-reduction in the aliased x-out block; the old row
+    # values stay readable in the unaliased xg operand until the apply
+    @pl.when(live_step & (kc == 0))
+    def _():
+        xo_ref[0, :] = jnp.full_like(xo_ref[0, :], _init_val(semiring))
+
+    nnz = nnz_ref[0]
+    base = kc * bk
+    valid_n = jnp.clip(nnz - base, 0, bk)
+
+    @pl.when(live_step & (valid_n > 0))
+    def _():
+        part = _gather_combine(semiring, bk, nnz, base, vals_ref[0],
+                               cols_ref[0], x_ref)
+        xo_ref[0, :] = _acc(semiring, xo_ref[0, :], part)
+
+    @pl.when(live_step & (kc == nk - 1))
+    def _():
+        y = xo_ref[0, :]
+        xg = xg_ref[0, :]
+        vg = valid_ref[0, :]
+        x_new, imp = _apply_rows(apply_kind, semiring, y, xg, vg,
+                                 par_ref[0], par_ref[2], par_ref[1])
+        xo_ref[0, :] = x_new
+        imp_any = jnp.any(imp)
+        cho_ref[0] = cho_ref[0] | imp_any
+        conv_ref[0] = conv_ref[0] | imp_any
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "semiring", "apply_kind", "bk", "interpret"))
+def bsr_spmv_fused(block_vals: jnp.ndarray, block_cols: jnp.ndarray,
+                   block_nnz: jnp.ndarray, x: jnp.ndarray,
+                   xg: jnp.ndarray, valid: jnp.ndarray,
+                   act_rows: jnp.ndarray, damping, tol, inv_n,
+                   semiring: str = "min_plus", apply_kind: str = "relax",
+                   bk: int = 8, interpret: bool = True):
+    """One fused frontier-masked sweep over the active row-blocks.
+
+    Args:
+      block_vals/block_cols/block_nnz: (R, K, B, B)/(R, K)/(R,) BSR rows.
+      x: (C, B) full source-node values (read-only, previous sweep).
+      xg: (R, B) current values of THESE rows (``x`` itself for the
+        whole-graph sync engine; the group slice for the async engine).
+      valid: (R, B) bool — real (non-padding) vertices.
+      act_rows: (R,) bool — rows to relax this sweep (the frontier rule:
+        any live tile reads a changed source block).
+      damping/tol/inv_n: apply-rule scalars (PageRank).
+    Returns:
+      x_new (R, B) — relaxed active rows, other rows passed through;
+      changed (R,) bool — rows the apply rule improved (next frontier);
+      improved_any () bool — fused convergence flag (``changed.any()``).
+    """
     r, k, b, _ = block_vals.shape
     if k % bk:
         pad = bk - k % bk
@@ -112,18 +279,53 @@ def bsr_spmv(block_vals: jnp.ndarray, block_cols: jnp.ndarray,
         block_cols = jnp.pad(block_cols, ((0, 0), (0, pad)))
         k += pad
     c = x.shape[0]
-    grid = (r, k // bk)
-    return pl.pallas_call(
-        functools.partial(_bsr_spmv_kernel, semiring=semiring, bk=bk),
-        grid=grid,
+    nk = k // bk
+
+    # compact active list: active rows first (stable ⇒ deterministic),
+    # tail steps clamped onto the last active row and predicated off
+    act_rows = act_rows.astype(bool)
+    order = jnp.argsort(~act_rows, stable=True).astype(jnp.int32)
+    na = jnp.sum(act_rows).astype(jnp.int32)
+    idx = jnp.minimum(jnp.arange(r, dtype=jnp.int32),
+                      jnp.maximum(na - 1, 0))
+    active_list = order[idx]
+    params = jnp.stack([jnp.float32(damping), jnp.float32(tol),
+                        jnp.float32(inv_n)])
+
+    xg = xg.astype(jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(r, nk),
         in_specs=[
-            pl.BlockSpec((1,), lambda r, kc: (r,)),                    # nnz
-            pl.BlockSpec((1, bk), lambda r, kc: (r, kc)),              # cols
-            pl.BlockSpec((1, bk, b, b), lambda r, kc: (r, kc, 0, 0)),  # vals
-            pl.BlockSpec((c, b), lambda r, kc: (0, 0)),                # x
+            pl.BlockSpec((1,), lambda i, kc, na, al: (al[i],)),    # nnz
+            pl.BlockSpec((1, bk), lambda i, kc, na, al: (al[i], kc)),
+            pl.BlockSpec((1, bk, b, b),
+                         lambda i, kc, na, al: (al[i], kc, 0, 0)),  # vals
+            pl.BlockSpec((c, b), lambda i, kc, na, al: (0, 0)),     # x
+            pl.BlockSpec((1, b), lambda i, kc, na, al: (al[i], 0)),  # xg
+            pl.BlockSpec((1, b), lambda i, kc, na, al: (al[i], 0)),  # valid
+            pl.BlockSpec((3,), lambda i, kc, na, al: (0,)),         # params
+            pl.BlockSpec((1, b), lambda i, kc, na, al: (al[i], 0)),  # x alias
+            pl.BlockSpec((1,), lambda i, kc, na, al: (al[i],)),     # ch alias
         ],
-        out_specs=pl.BlockSpec((1, b), lambda r, kc: (r, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, b), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, b), lambda i, kc, na, al: (al[i], 0)),  # x_new
+            pl.BlockSpec((1,), lambda i, kc, na, al: (al[i],)),     # changed
+            pl.BlockSpec((1,), lambda i, kc, na, al: (0,)),         # conv
+        ])
+    x_new, changed, conv = pl.pallas_call(
+        functools.partial(_fused_kernel, semiring=semiring,
+                          apply_kind=apply_kind, bk=bk, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((r, b), jnp.float32),
+                   jax.ShapeDtypeStruct((r,), jnp.bool_),
+                   jax.ShapeDtypeStruct((1,), jnp.bool_)],
+        # operand indices COUNT the scalar-prefetch operands (na, al):
+        # 9 = the xg copy aliased onto x_new, 10 = the zero changed-bits
+        input_output_aliases={9: 0, 10: 1},
         interpret=interpret,
-    )(block_nnz, block_cols, block_vals.astype(jnp.float32),
-      x.astype(jnp.float32))
+    )(jnp.reshape(na, (1,)), active_list,
+      block_nnz, block_cols, block_vals.astype(jnp.float32),
+      x.astype(jnp.float32), xg, valid, params,
+      xg, jnp.zeros((r,), dtype=jnp.bool_))
+    return x_new, changed, conv[0]

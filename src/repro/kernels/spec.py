@@ -1,0 +1,116 @@
+"""KernelSpec — the structured kernel-selection half of an ExecutionPolicy.
+
+The bare ``impl="ref"|"pallas"`` string that used to live on
+``ExecutionPolicy`` said *which* kernel but nothing about *how* to run
+it.  ``KernelSpec`` is that surface made explicit:
+
+  impl           "ref" (pure-jnp oracle, XLA-fused; SPMD-partitionable)
+                 or "pallas" (Mosaic kernel; interpret mode off-TPU).
+  block_size     bk — tiles staged HBM→VMEM per grid step of the Pallas
+                 SpMV (the inner tile-chunk width).  None = default (or
+                 the autotuned winner when ``autotune=True``).
+  rows_per_step  row-blocks relaxed per grid step of the *unfused*
+                 Pallas SpMV (coarsens the grid; trades launch overhead
+                 against VMEM residency).  The fused kernel walks its
+                 compact active-row list one row-block per step, so it
+                 only accepts None/1 here.
+  fuse_frontier  run the fused relax + frontier-select + convergence-
+                 reduce kernel with active-tile skipping (see
+                 ``bsr_spmv.bsr_spmv_fused``) instead of SpMV + separate
+                 XLA apply/reduce ops.
+  autotune       measure (not model) the free tiling knobs on a small
+                 calibration run at prepare() time and cache the winner
+                 beside the plan in the PlanStore.
+
+Incoherent combinations fail loudly at construction (mirroring the
+PR-7 ``dist_flavor`` validation on ``ExecutionPolicy``): every knob
+other than ``impl`` describes the Pallas kernel, so they all require
+``impl="pallas"``; ``autotune`` with every tunable pinned has nothing
+left to tune.
+
+Specs are frozen/hashable: they ride in ``ExecutionPolicy`` equality
+(wave coalescing) and in ``PlanKey`` (tuning cache identity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+IMPLS = ("ref", "pallas")
+
+DEFAULT_BLOCK_SIZE = 8     # bk: tile-chunk width of the Pallas SpMV grid
+DEFAULT_ROWS_PER_STEP = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    impl: str = "ref"
+    block_size: Optional[int] = None
+    rows_per_step: Optional[int] = None
+    fuse_frontier: bool = False
+    autotune: bool = False
+
+    def __post_init__(self):
+        if self.impl not in IMPLS:
+            raise ValueError(
+                f"impl must be one of {IMPLS}: {self.impl!r}")
+        for field in ("block_size", "rows_per_step"):
+            v = getattr(self, field)
+            if v is not None and (not isinstance(v, int) or v < 1):
+                raise ValueError(
+                    f"{field} must be None or a positive int: {v!r}")
+        if self.impl == "ref":
+            bad = [f for f in ("block_size", "rows_per_step") if
+                   getattr(self, f) is not None]
+            bad += [f for f in ("fuse_frontier", "autotune") if
+                    getattr(self, f)]
+            if bad:
+                raise ValueError(
+                    f"{'/'.join(bad)} describe the Pallas kernel and "
+                    "require impl='pallas'; the ref path has no tiling "
+                    "knobs")
+        if self.fuse_frontier and self.rows_per_step not in (None, 1):
+            raise ValueError(
+                "the fused kernel walks its compact active-row list one "
+                "row-block per grid step; rows_per_step="
+                f"{self.rows_per_step} needs fuse_frontier=False")
+        if self.autotune:
+            tunables = ("block_size",) if self.fuse_frontier else \
+                ("block_size", "rows_per_step")
+            if all(getattr(self, f) is not None for f in tunables):
+                raise ValueError(
+                    "autotune=True with every tunable pinned "
+                    f"({', '.join(tunables)}) has nothing to tune; "
+                    "unpin one or drop autotune")
+
+    def concrete(self, tuning: Optional[dict] = None) -> "KernelSpec":
+        """The spec engines actually execute: free knobs filled from a
+        tuning record (``kernels.autotune`` output) or defaults, and the
+        ``autotune`` request flag stripped (it described *how to pick*
+        the knobs, not the kernel itself)."""
+        t = tuning or {}
+        if self.impl == "ref":
+            return KernelSpec(impl="ref")
+        bk = self.block_size or int(t.get("block_size")
+                                    or DEFAULT_BLOCK_SIZE)
+        if self.fuse_frontier:
+            rs = 1
+        else:
+            rs = self.rows_per_step or int(t.get("rows_per_step")
+                                           or DEFAULT_ROWS_PER_STEP)
+        return KernelSpec(impl=self.impl, block_size=bk, rows_per_step=rs,
+                          fuse_frontier=self.fuse_frontier, autotune=False)
+
+
+def as_kernel_spec(spec) -> KernelSpec:
+    """Coerce the historical spellings — None (defaults) and the bare
+    impl string — into a KernelSpec."""
+    if spec is None:
+        return KernelSpec()
+    if isinstance(spec, str):
+        return KernelSpec(impl=spec)
+    if isinstance(spec, KernelSpec):
+        return spec
+    raise TypeError(
+        f"expected KernelSpec, impl string or None, got {type(spec)}")

@@ -34,6 +34,26 @@ ICI_BW = 50e9           # bytes/s / link
 CHIPS = 256
 
 
+def kernel_roofline(flops: float, hbm_bytes: float,
+                    ici_bytes: float = 0.0) -> Dict:
+    """Single-chip roofline for one kernel invocation (no dry-run dump):
+    seconds per term, the dominant bottleneck, and the modeled runtime
+    assuming perfect compute/memory overlap.  The kernel autotuner
+    (kernels/autotune.py) validates its *measured* winner against this
+    model — agreement means the measurement is believable, disagreement
+    is recorded (measured always wins; the model can't see interpret
+    mode or VMEM effects)."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = ici_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "modeled_s": max(t_compute, t_memory) + t_coll}
+
+
 def load_cells(directory: str) -> List[Dict]:
     cells = []
     for path in sorted(glob.glob(os.path.join(directory, "*.json"))):

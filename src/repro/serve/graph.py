@@ -47,6 +47,7 @@ from ..core.api import (ExecutionPolicy, GraphProcessor, PlanKey, QuerySpec,
                         Result, validate_spec)
 from ..core.engine import Prepared
 from ..core.graph import Graph
+from ..kernels.spec import KernelSpec
 
 # algorithms whose single-source requests can share one batched vmap run
 COALESCIBLE = ("sssp", "bfs")
@@ -61,14 +62,21 @@ def _plan_filename(fingerprint: str, key: PlanKey) -> str:
 # a restarted server *warm* a graph's hot plans at register() time
 # instead of on the first unlucky request (serve.server.GraphServer)
 ACCESS_LOG = "plan_access.json"
+# measured kernel tunings (kernels/autotune.py records) keyed like plans:
+# (fingerprint, PlanKey-with-kernel) — the persistent tier is what makes
+# a warm restart reuse tunings instead of re-measuring
+TUNINGS_LOG = "plan_tunings.json"
 _ACCESS_FLUSH_S = 1.0   # throttle: at most one log write per second
 
 
 def _key_to_json(key: PlanKey) -> dict:
-    return dataclasses.asdict(key)
+    return dataclasses.asdict(key)  # nested KernelSpec → nested dict
 
 
 def _key_from_json(d: dict) -> PlanKey:
+    kd = d.get("kernel")
+    if kd is not None and not isinstance(kd, KernelSpec):
+        d = dict(d, kernel=KernelSpec(**kd))
     return PlanKey(**d)
 
 
@@ -102,8 +110,12 @@ class PlanStore:
         self._access: Dict[str, Dict[PlanKey, int]] = {}
         self._access_dirty = False
         self._access_flushed = 0.0
+        # measured kernel tunings, keyed like plans but with the
+        # requesting KernelSpec folded into the PlanKey
+        self._tunings: Dict[Tuple[str, PlanKey], dict] = {}
         if self.cache_dir:
             self._load_access_log()
+            self._load_tunings()
 
     # -- lookup ----------------------------------------------------------
 
@@ -196,6 +208,49 @@ class PlanStore:
                 pass
             return None
 
+    # -- measured kernel tunings (autotune records) -----------------------
+
+    def get_tuning(self, fingerprint: str, key: PlanKey) -> Optional[dict]:
+        with self._lock:
+            return self._tunings.get((fingerprint, key))
+
+    def put_tuning(self, fingerprint: str, key: PlanKey,
+                   record: dict) -> None:
+        with self._lock:
+            self._tunings[(fingerprint, key)] = dict(record)
+        self._flush_tunings()
+
+    def _flush_tunings(self) -> None:
+        if not self.cache_dir:
+            return
+        with self._lock:
+            doc = {"version": 1,
+                   "tunings": [[fp, _key_to_json(k), rec]
+                               for (fp, k), rec in self._tunings.items()]}
+        path = os.path.join(self.cache_dir, TUNINGS_LOG)
+        try:
+            tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
+            os.replace(tmp, path)  # atomic vs concurrent readers
+        except OSError:
+            with self._lock:
+                self._stats["disk_errors"] += 1
+
+    def _load_tunings(self) -> None:
+        path = os.path.join(self.cache_dir, TUNINGS_LOG)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if doc.get("version") != 1:
+                return
+            self._tunings = {
+                (fp, _key_from_json(kd)): rec
+                for fp, kd, rec in doc.get("tunings", [])}
+        except (OSError, ValueError, TypeError, KeyError):
+            # a corrupt tunings log only costs a re-measure
+            self._tunings = {}
+
     # -- plan access log (feeds serve.server plan warming) ---------------
 
     def _record_access(self, fingerprint: str, key: PlanKey) -> None:
@@ -270,7 +325,8 @@ class PlanStore:
     def stats(self) -> dict:
         with self._lock:
             s = dict(self._stats, plans=len(self._mem),
-                     bytes=self._bytes, max_bytes=self.max_bytes)
+                     bytes=self._bytes, max_bytes=self.max_bytes,
+                     tunings=len(self._tunings))
             lookups = s["mem_hits"] + s["disk_hits"] + s["misses"]
             # per-tier rates: a memory hit is free, a disk hit still
             # pays a deserialize — capacity tuning needs to see both

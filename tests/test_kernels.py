@@ -97,6 +97,118 @@ def test_bsr_padding_is_noop(rng):
                                    rtol=1e-6)
 
 
+@pytest.mark.parametrize("rows_per_step", [2, 4])
+def test_rows_per_step_matches_single_row(rows_per_step, rng):
+    """Grid coarsening only regroups row-blocks per step — each row's
+    accumulation order is untouched, so the result is unchanged."""
+    g = G.rmat(100, 500, seed=9)
+    for name in SEMIRINGS:
+        bsr = G.to_bsr(g, b=8, pad_value=float(sr.get(name).zero))
+        x = rng.random((bsr.r, bsr.b)).astype(np.float32)
+        from repro.kernels.spec import KernelSpec
+        args = (jnp.asarray(bsr.block_vals), jnp.asarray(bsr.block_cols),
+                jnp.asarray(bsr.block_nnz), jnp.asarray(x))
+        y1 = ops.bsr_spmv(*args, semiring=name, impl="pallas", bk=4)
+        spmv = ops.select_kernel("bsr_spmv", KernelSpec(
+            impl="pallas", block_size=4, rows_per_step=rows_per_step))
+        yr = spmv(*args, semiring=name)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(yr))
+
+
+# -- fused relax + frontier-select + convergence-reduce ---------------------
+
+def _fused_oracle(bsr, x, valid, act, semiring, apply_kind="relax",
+                  damping=0.85, tol=1e-6, inv_n=1e-2):
+    """Unfused reference composition: ref SpMV -> engine apply rule ->
+    frontier mask.  Rows outside ``act`` pass through bitwise."""
+    from repro.core import semiring as S
+    from repro.core.engine import _apply
+    y = ops.bsr_spmv(jnp.asarray(bsr.block_vals),
+                     jnp.asarray(bsr.block_cols),
+                     jnp.asarray(bsr.block_nnz), jnp.asarray(x),
+                     semiring=semiring, impl="ref")
+    x_new, imp = _apply(apply_kind, S.get(semiring), y, jnp.asarray(x),
+                        jnp.asarray(valid), jnp.float32(damping),
+                        jnp.float32(inv_n), jnp.float32(tol))
+    x_exp = np.where(act[:, None], np.asarray(x_new), x)
+    ch_exp = act & np.any(np.asarray(imp), axis=1)
+    return x_exp, ch_exp
+
+
+def _fused_call(bsr, x, valid, act, semiring, apply_kind="relax", bk=4,
+                vals=None):
+    from repro.kernels.bsr_spmv import bsr_spmv_fused
+    xj = jnp.asarray(x)
+    return bsr_spmv_fused(
+        jnp.asarray(vals if vals is not None else bsr.block_vals),
+        jnp.asarray(bsr.block_cols), jnp.asarray(bsr.block_nnz),
+        xj, xj, jnp.asarray(valid), jnp.asarray(act),
+        jnp.float32(0.85), jnp.float32(1e-6), jnp.float32(1e-2),
+        semiring=semiring, apply_kind=apply_kind, bk=bk)
+
+
+@pytest.mark.parametrize("semiring", SEMIRINGS)
+@pytest.mark.parametrize("frontier", ["empty", "sparse", "dense"])
+def test_fused_matches_unfused_composition(semiring, frontier, rng):
+    """The fused kernel must equal ref-SpMV + engine apply + frontier
+    mask: EXACT for the comparison semirings, float-accumulation
+    tolerance for plus_times (different reduction grouping)."""
+    g = G.rmat(120, 700, seed=11)
+    bsr = G.to_bsr(g, b=8, pad_value=float(sr.get(semiring).zero))
+    x = rng.random((bsr.r, bsr.b)).astype(np.float32)
+    if semiring == "max_min":
+        x = (x > 0.5).astype(np.float32)
+    valid = np.ones((bsr.r, bsr.b), bool)
+    act = {"empty": np.zeros(bsr.r, bool),
+           "sparse": rng.random(bsr.r) < 0.15,
+           "dense": np.ones(bsr.r, bool)}[frontier]
+    x_exp, ch_exp = _fused_oracle(bsr, x, valid, act, semiring)
+    x_new, changed, conv = _fused_call(bsr, x, valid, act, semiring)
+    if semiring == "plus_times":
+        np.testing.assert_allclose(np.asarray(x_new), x_exp, rtol=2e-6)
+    else:
+        np.testing.assert_array_equal(np.asarray(x_new), x_exp)
+    np.testing.assert_array_equal(np.asarray(changed), ch_exp)
+    assert bool(conv) == bool(ch_exp.any())
+    if frontier == "empty":
+        # all-converged early exit: pure passthrough, nothing changed
+        np.testing.assert_array_equal(np.asarray(x_new), x)
+        assert not bool(conv)
+
+
+def test_fused_pagerank_apply(rng):
+    g = G.rmat(80, 400, seed=13)
+    bsr = G.to_bsr(g, b=8, pad_value=0.0)
+    x = rng.random((bsr.r, bsr.b)).astype(np.float32)
+    valid = np.ones((bsr.r, bsr.b), bool)
+    act = np.ones(bsr.r, bool)
+    x_exp, ch_exp = _fused_oracle(bsr, x, valid, act, "plus_times",
+                                  apply_kind="pagerank")
+    x_new, changed, conv = _fused_call(bsr, x, valid, act, "plus_times",
+                                       apply_kind="pagerank")
+    np.testing.assert_allclose(np.asarray(x_new), x_exp, rtol=2e-6)
+    np.testing.assert_array_equal(np.asarray(changed), ch_exp)
+
+
+def test_fused_respects_nnz_bound(rng):
+    """Garbage tiles beyond block_nnz must not leak into the fused
+    result either (same self-timed bound as the unfused kernel)."""
+    g = G.rmat(60, 240, seed=4)
+    bsr = G.to_bsr(g, b=8, pad_value=np.inf)  # min_plus
+    vals = bsr.block_vals.copy()
+    lane = np.arange(bsr.k_max)[None, :]
+    trash = lane >= bsr.block_nnz[:, None]
+    vals[np.broadcast_to(trash[:, :, None, None], vals.shape)] = -123.0
+    x = rng.random((bsr.r, bsr.b)).astype(np.float32)
+    valid = np.ones((bsr.r, bsr.b), bool)
+    act = np.ones(bsr.r, bool)
+    x_exp, ch_exp = _fused_oracle(bsr, x, valid, act, "min_plus")
+    x_new, changed, _ = _fused_call(bsr, x, valid, act, "min_plus",
+                                    vals=vals)
+    np.testing.assert_array_equal(np.asarray(x_new), x_exp)
+    np.testing.assert_array_equal(np.asarray(changed), ch_exp)
+
+
 def test_pallas_respects_nnz_bound(rng):
     """Garbage beyond block_nnz must not affect the Pallas result
     (self-timed execution: only true tiles are combined)."""
