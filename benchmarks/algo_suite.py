@@ -1,0 +1,49 @@
+"""Algorithm-catalog suite — the PR-9 families (pagerank_delta / cc /
+kcore / tricount) on the paper's stand-in graphs, through the same
+measured-counters → modeled-cycles pipeline as Fig. 5.  Everything
+dispatches registry-generically (``common.run_algo`` builds one
+QuerySpec per row); ``kcore`` shows the params-passthrough path.
+
+Gated by ``trend_check.py`` on the modeled CPU speedup per
+(graph, algorithm) row, alongside the fig5 family.
+"""
+
+from __future__ import annotations
+
+from . import common
+
+# (algorithm, params) rows; params ride the QuerySpec (kcore's k lands
+# in the policy's scalar slot via the registry's param_map)
+ALGOS = [
+    ("pagerank_delta", {}),
+    ("cc", {}),
+    ("kcore", {"k": 2.0}),
+    ("tricount", {}),
+]
+
+
+def run(graphs=None, emit=common.csv_line):
+    graphs = graphs or common.load_graphs()
+    rows = []
+    for gname, g in graphs.items():
+        for algo, params in ALGOS:
+            rep = common.platform_reports(g, algo, **params)
+            nale, cpu, gpu = rep["nale"], rep["cpu"], rep["gpu"]
+            speedup_cpu = cpu.time_s / max(nale.time_s, 1e-12)
+            speedup_gpu = gpu.time_s / max(nale.time_s, 1e-12)
+            emit(f"algo_suite/{gname}/{algo}/nale_cycles",
+                 rep["wall_async"] * 1e6,
+                 f"cycles={nale.cycles:.3g}")
+            emit(f"algo_suite/{gname}/{algo}/speedup", 0.0,
+                 f"vs_cpu={speedup_cpu:.1f}x vs_gpu={speedup_gpu:.1f}x")
+            rows.append(dict(graph=gname, algo=algo, params=params,
+                             nale_cycles=nale.cycles,
+                             cpu_cycles=cpu.cycles,
+                             gpu_cycles=gpu.cycles,
+                             speedup_cpu=speedup_cpu,
+                             speedup_gpu=speedup_gpu,
+                             sweeps_async=rep["async_stats"].sweeps,
+                             sweeps_sync=rep["sync_stats"].sweeps,
+                             edge_work_async=rep["async_stats"].edge_work,
+                             edge_work_sync=rep["sync_stats"].edge_work))
+    return rows

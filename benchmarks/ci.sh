@@ -23,9 +23,11 @@ if [ "$DEVICES" -gt 1 ]; then
     # (batched distributed dispatch through GraphProcessor/
     # ExecutionPolicy) + the continuous-batching server (wave scheduler
     # over a real device grid)
+    # ... + the algorithm-catalog parity grid (pagerank_delta / cc /
+    # kcore / tricount through every engine flavor on the device grid)
     python -m pytest -x -q tests/test_distribution.py \
         tests/test_async_dist.py tests/test_api.py \
-        tests/test_graph_server.py
+        tests/test_graph_server.py tests/test_algorithms.py
     echo "== batched distributed + serve sweep families (${DEVICES} devices) =="
     python -m benchmarks.run --scale 0.002 --json BENCH_multidev.json \
         --skip fig5 fig6 avs kernel lm

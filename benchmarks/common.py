@@ -65,24 +65,28 @@ def processor(g, b: int = 16,
                               num_clusters=num_clusters)
 
 
-def run_algo(g, algo: str, mode: str, b: int = 16, num_clusters: int = 64):
+# per-algorithm policy overrides on top of the benchmark baseline
+# (mode=<caller>, max_sweeps=100_000) — the historical fig5/fig6 knobs
+_BENCH_POLICY = {
+    "pagerank": dict(tol=1e-7, max_sweeps=500),
+    "pagerank_delta": dict(tol=1e-7, max_sweeps=500),
+}
+
+
+def run_algo(g, algo: str, mode: str, b: int = 16, num_clusters: int = 64,
+             **params):
+    """Registry-generic single-query run: any registered algorithm
+    dispatches through one QuerySpec (``params`` ride along, e.g.
+    ``k=2.0`` for kcore) — no per-name branches."""
     proc = processor(g, b, num_clusters)
-    pol = api.ExecutionPolicy(mode=mode, max_sweeps=100_000)
+    a = api.get_algorithm(algo)
+    pol = api.ExecutionPolicy(mode=mode, max_sweeps=100_000).but(
+        **_BENCH_POLICY.get(algo, {}))
+    spec = api.QuerySpec(algo=algo,
+                         sources=(0,) if a.source_required else (),
+                         policy=pol, params=params)
     t0 = time.time()
-    if algo == "sssp":
-        r = proc.sssp(0, policy=pol)
-    elif algo == "bfs":
-        r = proc.bfs(0, policy=pol)
-    elif algo == "pagerank":
-        r = proc.pagerank(policy=pol.but(tol=1e-7, max_sweeps=500))
-    elif algo == "cc":
-        r = proc.connected_components(policy=pol)
-    elif algo == "minitri":
-        r = proc.minitri()
-    elif algo == "dfs":
-        r = proc.dfs(0)
-    else:
-        raise ValueError(algo)
+    r = proc.run(spec)
     wall = time.time() - t0
     return r, wall
 
@@ -111,13 +115,14 @@ def run_batched(g, algo: str, sources, mode: str = "distributed",
     return r, time.time() - t0
 
 
-def platform_reports(g, algo: str, b: int = 16, num_clusters: int = 64):
+def platform_reports(g, algo: str, b: int = 16, num_clusters: int = 64,
+                     **params):
     """(nale, cpu, gpu) PlatformReports for one (graph, algorithm)."""
-    ra, wall_a = run_algo(g, algo, "async", b, num_clusters)
-    if algo in ("minitri", "dfs"):
+    ra, wall_a = run_algo(g, algo, "async", b, num_clusters, **params)
+    if api.get_algorithm(algo).runner is not None:
         rs, wall_s = ra, wall_a  # one-shot / sequential: same schedule
     else:
-        rs, wall_s = run_algo(g, algo, "sync", b, num_clusters)
+        rs, wall_s = run_algo(g, algo, "sync", b, num_clusters, **params)
     prep = ra.prepared
     if prep is None:  # minitri / dfs have no BSR image; borrow a plan
         prep = processor(g, b, num_clusters).prepare("min_plus")

@@ -20,8 +20,9 @@ import json
 
 import numpy as np
 
-from . import async_vs_sync, common, dist_async, dist_batched, \
-    fig5_cycles, fig6_power, kernel_bench, lm_bench, serve_latency
+from . import algo_suite, async_vs_sync, common, dist_async, \
+    dist_batched, fig5_cycles, fig6_power, kernel_bench, lm_bench, \
+    serve_latency
 
 
 def main() -> None:
@@ -34,7 +35,8 @@ def main() -> None:
                          "('' disables)")
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["fig5", "fig6", "avs", "dist", "dist_async",
-                             "kernel", "kernel_fused", "lm", "serve"])
+                             "kernel", "kernel_fused", "lm", "serve",
+                             "algo_suite"])
     args = ap.parse_args()
 
     graphs = common.load_graphs(args.scale)
@@ -49,6 +51,8 @@ def main() -> None:
         out["fig5"] = fig5_cycles.run(graphs)
     if "fig6" not in args.skip:
         out["fig6"] = fig6_power.run(graphs)
+    if "algo_suite" not in args.skip:
+        out["algo_suite"] = algo_suite.run(graphs)
     if "avs" not in args.skip:
         out["async_vs_sync"] = async_vs_sync.run(graphs)
     if "dist" not in args.skip:
@@ -80,6 +84,11 @@ def main() -> None:
             print(f"perf/W vs GPU   : geomean "
                   f"{np.exp(np.log(gp).mean()):.1f}x  "
                   f"range [{gp.min():.1f}, {gp.max():.1f}]  (paper: 2-5x)")
+    if "algo_suite" in out:
+        asp = np.array([r["speedup_cpu"] for r in out["algo_suite"]])
+        print(f"algorithm catalog (pagerank_delta/cc/kcore/tricount, "
+              f"modeled): geomean {np.exp(np.log(asp).mean()):.1f}x vs "
+              f"CPU  range [{asp.min():.1f}, {asp.max():.1f}]")
     if "async_vs_sync" in out:
         wr = [r["work_reduction"] for r in out["async_vs_sync"]
               if "work_reduction" in r]

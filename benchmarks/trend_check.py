@@ -59,6 +59,15 @@ def _kernel_fused_speedups(snapshot: dict) -> dict:
             if r.get("speedup_modeled") is not None}
 
 
+def _algo_suite_speedups(snapshot: dict) -> dict:
+    # gates the algorithm catalog (pagerank_delta / cc / kcore /
+    # tricount) on the same NALE-vs-CPU modeled speedup as fig5 — drift
+    # means an update rule's sweep/edge-work trajectory changed
+    return {(r["graph"], r["algo"]): float(r["speedup_cpu"])
+            for r in snapshot.get("algo_suite", [])
+            if r.get("speedup_cpu") is not None}
+
+
 def _serve_latency_speedups(snapshot: dict) -> dict:
     # the family's wall p50/p99 are operator info (host-dependent); the
     # gated number is the modeled batching speedup, which depends only
@@ -75,6 +84,7 @@ FAMILIES = {
     "dist_async": _dist_async_speedups,
     "kernel_fused": _kernel_fused_speedups,
     "serve_latency": _serve_latency_speedups,
+    "algo_suite": _algo_suite_speedups,
 }
 
 

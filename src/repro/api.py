@@ -35,6 +35,9 @@ control, and background plan warming from the store's access log:
     dist = fut.result().values
 """
 
+from .core.algorithms import (AlgorithmSpec, get_algorithm,  # noqa: F401
+                              register_algorithm,
+                              registered_algorithms)
 from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
                        QuerySpec, Result)
 from .core.engine import (Prepared, RunStats,  # noqa: F401
@@ -46,8 +49,10 @@ from .serve.sched import (Backpressure, DeadlineExceeded,  # noqa: F401
                           WavePolicy, WaveScheduler)
 from .serve.server import GraphServer  # noqa: F401
 
-__all__ = ["ExecutionPolicy", "GraphProcessor", "GraphService",
-           "KernelSpec", "PlanKey", "PlanStore", "QuerySpec", "Result",
-           "Prepared", "RunStats", "DistStats", "serialize_prepared",
-           "deserialize_prepared", "GraphServer", "WaveScheduler",
-           "WavePolicy", "DeadlineExceeded", "Backpressure"]
+__all__ = ["AlgorithmSpec", "ExecutionPolicy", "GraphProcessor",
+           "GraphService", "KernelSpec", "PlanKey", "PlanStore",
+           "QuerySpec", "Result", "Prepared", "RunStats", "DistStats",
+           "serialize_prepared", "deserialize_prepared", "GraphServer",
+           "WaveScheduler", "WavePolicy", "DeadlineExceeded",
+           "Backpressure", "get_algorithm", "register_algorithm",
+           "registered_algorithms"]

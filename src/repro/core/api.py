@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import engine as eng
+from .algorithms import (AlgorithmSpec, get_algorithm,  # noqa: F401
+                         register_algorithm, registered_algorithms)
 from .engine import Prepared, RunStats
 from .graph import Graph, to_ell_fast
 from ..kernels.spec import KernelSpec, as_kernel_spec
@@ -190,8 +192,8 @@ class QuerySpec:
     the spec stays hashable either way.
     """
 
-    algo: str                                   # sssp|bfs|pagerank|cc|
-                                                # reachability|minitri|dfs
+    algo: str                                   # an AlgorithmSpec name
+                                                # (core/algorithms.py)
     sources: Tuple[int, ...] = ()
     batched: bool = False                       # sources is a query axis
     policy: Optional[ExecutionPolicy] = None    # None → session default
@@ -199,6 +201,9 @@ class QuerySpec:
                   Tuple[Tuple[str, float], ...]] = ()
 
     def __post_init__(self):
+        # fail at construction, not deep in engine dispatch: the error
+        # lists every registered algorithm
+        get_algorithm(self.algo)
         items = self.params.items() if isinstance(self.params, Mapping) \
             else ((str(k), v) for k, v in self.params)
         # sorted in both forms: equivalent specs must compare/hash equal
@@ -245,37 +250,33 @@ class Result:
         return rep
 
 
-ALGOS = ("sssp", "bfs", "pagerank", "cc", "reachability", "minitri",
-         "dfs")
-# algorithms that need at least one source vertex
-SOURCE_REQUIRED = ("sssp", "bfs", "reachability", "dfs")
+# back-compat aliases (snapshotted at import; the registry in
+# core/algorithms.py is the source of truth and grows at runtime)
+ALGOS = registered_algorithms()
+SOURCE_REQUIRED = tuple(n for n in ALGOS
+                        if get_algorithm(n).source_required)
 
 
 def validate_spec(spec: QuerySpec) -> None:
     """Raise on specs that can never execute.  Shared by
     ``GraphProcessor.run`` and the serving layer's ``submit`` (which
     must reject bad requests before they can ride in a batch)."""
-    if spec.algo not in ALGOS:
-        raise ValueError(
-            f"unknown algorithm {spec.algo!r}; expected one of {ALGOS}")
-    if spec.algo in SOURCE_REQUIRED and not spec.sources:
+    a = get_algorithm(spec.algo)
+    if a.source_required and not spec.sources:
         raise ValueError(
             f"{spec.algo} requires at least one source vertex")
+    given = dict(spec.params)
+    missing = [k for k in a.required_params if k not in given]
+    if missing:
+        raise ValueError(
+            f"{spec.algo} requires params={{{', '.join(repr(m) for m in missing)}: ...}}"
+            f" (e.g. QuerySpec(algo={spec.algo!r}, "
+            f"params={{{missing[0]!r}: 2}}))")
     if len(spec.sources) > 1 and not spec.batched:
         raise ValueError(
             f"{len(spec.sources)} sources with batched=False would "
             "silently run only the first; set batched=True (or submit "
             "one spec per source)")
-
-
-# back-compat defaults matching the old free functions
-_ALGO_POLICY = {
-    "pagerank": dict(tol=1e-8, max_sweeps=500),
-    "sssp": dict(max_sweeps=100_000),
-    "bfs": dict(max_sweeps=100_000),
-    "cc": dict(max_sweeps=100_000),
-    "reachability": dict(max_sweeps=100_000, mode="sync"),
-}
 
 
 class GraphProcessor:
@@ -323,6 +324,11 @@ class GraphProcessor:
                     weights=np.ones(g.nnz, dtype=np.float32))
             elif name == "undirected":
                 self._variants[name] = g.to_undirected()
+            elif name == "unit_undirected":
+                und = self._variant("undirected")
+                self._variants[name] = Graph(
+                    n=und.n, indptr=und.indptr, indices=und.indices,
+                    weights=np.ones(und.nnz, dtype=np.float32))
             else:
                 raise ValueError(f"unknown graph variant {name!r}")
         return self._variants[name]
@@ -415,24 +421,28 @@ class GraphProcessor:
 
     def resolve_policy(self, spec: QuerySpec) -> ExecutionPolicy:
         """The effective policy for a spec: explicit policy (or session
-        default merged with per-algorithm defaults), then ``params``
-        overrides.  Exposed so the serving layer can group same-policy
+        default merged with the algorithm's registered defaults), then
+        ``params`` overrides (translated through the algorithm's
+        ``param_map``, so e.g. k-core's ``k`` rides the damping scalar
+        slot).  Exposed so the serving layer can group same-policy
         requests for coalescing exactly as ``run`` would execute them."""
-        pol = spec.policy or self.policy.but(
-            **_ALGO_POLICY.get(spec.algo, {}))
+        a = get_algorithm(spec.algo)
+        pol = spec.policy or self.policy.but(**dict(a.default_policy))
         if spec.params:
-            pol = pol.but(**dict(spec.params))
+            pm = dict(a.param_map)
+            pol = pol.but(**{pm.get(k, k): v
+                             for k, v in dict(spec.params).items()})
         return pol
 
     def run(self, spec: QuerySpec) -> Result:
         """Execute one QuerySpec.  All algorithm methods route here."""
         validate_spec(spec)
+        a = get_algorithm(spec.algo)
         pol = self.resolve_policy(spec)
-        if spec.algo == "minitri":
-            return self._minitri()
-        if spec.algo == "dfs":
-            return self._dfs(spec.sources[0])
-        p, key, x0f, pad, apply_kind, post = self._relaxation_setup(spec)
+        if a.runner is not None:
+            return getattr(self, a.runner)(spec, pol)
+        p, key, x0f, pad, apply_kind, post = self._relaxation_setup(
+            spec, pol)
         kern = self._kernel_for_run(p, key, pol.kernel)
         if spec.batched:
             return self._run_batched(spec, pol, p, x0f, pad, apply_kind,
@@ -446,55 +456,21 @@ class GraphProcessor:
                      **({"src": src} if src is not None else {}))
         return Result(values, stats, p, extra, policy=pol, graph=self.g)
 
-    # -- per-algorithm plan + frontier-init descriptors ------------------
+    # -- registry-driven plan + frontier-init descriptors ----------------
 
-    def _relaxation_setup(self, spec: QuerySpec):
+    def _relaxation_setup(self, spec: QuerySpec, pol: ExecutionPolicy):
         """Returns (Prepared, PlanKey, x0_builder(src), pad, apply_kind,
-        post)."""
-        algo = spec.algo
-        n = self.g.n
-        if algo == "pagerank":
-            key = self.plan_key("plus_times",
-                                normalize="out_stochastic")
-            p = self.prepare("plus_times", normalize="out_stochastic")
-
-            def x0f(_):
-                return np.full(n, 1.0 / n, dtype=np.float32)
-
-            def post(v):
-                return v / max(v.sum(), 1e-30)  # dangling-drop: L1 renorm
-
-            return p, key, x0f, 0.0, "pagerank", post
-        if algo in ("sssp", "bfs"):
-            variant = "base" if algo == "sssp" else "unit"
-            key = self.plan_key("min_plus", variant=variant)
-            p = self.prepare("min_plus", variant=variant)
-
-            def x0f(src):
-                x = np.full(n, np.inf, dtype=np.float32)
-                x[src] = 0.0
-                return x
-
-            return p, key, x0f, np.inf, "relax", lambda v: v
-        if algo == "cc":
-            key = self.plan_key("min_select", variant="undirected")
-            p = self.prepare("min_select", variant="undirected")
-
-            def x0f(_):
-                return p.perm.astype(np.float32)
-
-            return p, key, x0f, np.inf, "relax", lambda v: v
-        if algo == "reachability":
-            key = self.plan_key("max_min", variant="unit")
-            p = self.prepare("max_min", variant="unit")
-
-            def x0f(src):
-                x = np.zeros(n, dtype=np.float32)
-                x[src] = 1.0
-                return x
-
-            return p, key, x0f, 0.0, "relax", lambda v: v
-        raise ValueError(f"unknown algorithm {spec.algo!r}")
+        post) — all read off the algorithm's registered
+        ``AlgorithmSpec``; no per-algorithm branching here."""
+        a = get_algorithm(spec.algo)
+        key = self.plan_key(a.semiring, variant=a.variant, pull=a.pull,
+                            normalize=a.normalize)
+        p = self.prepare(a.semiring, variant=a.variant, pull=a.pull,
+                         normalize=a.normalize)
+        pad = float(a.ring.zero) if a.pad is None else a.pad
+        post = a.post if a.post is not None else (lambda v: v)
+        return p, key, (lambda src: a.init(p, src, pol)), pad, \
+            a.update, post
 
     def _frontier(self, p: Prepared, src: Optional[int]) -> jnp.ndarray:
         """Initial changed-set for the async engine: just the source's
@@ -613,7 +589,7 @@ class GraphProcessor:
         return Result(values, stats, p, extra, policy=pol,
                       graph=self.g)
 
-    # -- the paper's six algorithms (+ reachability) ---------------------
+    # -- the algorithm catalog (registry-backed convenience methods) -----
 
     def _spec(self, algo: str, sources, policy, **params) -> QuerySpec:
         batched = sources is not None and not np.isscalar(sources)
@@ -621,7 +597,8 @@ class GraphProcessor:
                 else ((int(sources),) if sources is not None else ()))
         params = {k: v for k, v in params.items() if v is not None}
         if params:
-            base = policy or self.policy.but(**_ALGO_POLICY.get(algo, {}))
+            base = policy or self.policy.but(
+                **dict(get_algorithm(algo).default_policy))
             policy = base.but(**params)
         return QuerySpec(algo=algo, sources=srcs, batched=batched,
                          policy=policy)
@@ -633,6 +610,18 @@ class GraphProcessor:
         """Convergence kwargs override the (given or session) policy;
         defaults are damping=0.85, tol=1e-8, max_sweeps=500."""
         return self.run(self._spec("pagerank", None, policy,
+                                   damping=damping, tol=tol,
+                                   max_sweeps=max_sweeps))
+
+    def pagerank_delta(self, damping: Optional[float] = None,
+                       tol: Optional[float] = None,
+                       max_sweeps: Optional[int] = None,
+                       policy: Optional[ExecutionPolicy] = None) -> Result:
+        """Delta-accumulating PageRank (GraphScale): ranks only rise from
+        the (1-damping)/n floor, making the update idempotent/monotone —
+        eligible for the async engine and ``dist_flavor="async"``.
+        Tolerance-bounded vs the classic sweep (see algorithm catalog)."""
+        return self.run(self._spec("pagerank_delta", None, policy,
                                    damping=damping, tol=tol,
                                    max_sweeps=max_sweeps))
 
@@ -651,6 +640,14 @@ class GraphProcessor:
             self, policy: Optional[ExecutionPolicy] = None) -> Result:
         return self.run(self._spec("cc", None, policy))
 
+    def kcore(self, k: float,
+              policy: Optional[ExecutionPolicy] = None) -> Result:
+        """k-core membership: values[v] is 1.0 iff v survives k-core
+        peeling.  ``k`` is a required query param (rides the policy's
+        damping scalar slot via the registry's param_map)."""
+        return self.run(QuerySpec(algo="kcore", policy=policy,
+                                  params={"k": float(k)}))
+
     def reachability(self, src: int,
                      policy: Optional[ExecutionPolicy] = None) -> Result:
         return self.run(self._spec("reachability", src, policy))
@@ -660,20 +657,47 @@ class GraphProcessor:
         del policy  # one-shot data-parallel: engine policy does not apply
         return self._minitri(chunk)
 
+    def tricount(self, policy: Optional[ExecutionPolicy] = None,
+                 chunk: int = 65536) -> Result:
+        """Per-vertex triangle counts (each triangle credits its three
+        corners once)."""
+        del policy  # one-shot data-parallel: engine policy does not apply
+        return self._tricount(chunk)
+
     def dfs(self, src: int,
             policy: Optional[ExecutionPolicy] = None) -> Result:
         return self.run(QuerySpec(algo="dfs", sources=(int(src),),
                                   policy=policy))
 
-    # -- MiniTri: one-shot data-parallel intersection workload -----------
+    # -- runner hooks: registry dispatch for non-relaxation workloads ----
 
-    def _minitri(self, chunk: int = 65536) -> Result:
+    def _minitri_runner(self, spec: QuerySpec,
+                        pol: ExecutionPolicy) -> Result:
+        return self._minitri()
+
+    def _tricount_runner(self, spec: QuerySpec,
+                         pol: ExecutionPolicy) -> Result:
+        return self._tricount()
+
+    def _dfs_runner(self, spec: QuerySpec,
+                    pol: ExecutionPolicy) -> Result:
+        return self._dfs(spec.sources[0])
+
+    # -- triangle workloads: one-shot data-parallel intersections --------
+
+    def _oriented_edges(self):
+        """Shared compile-time step for the triangle workloads: orient
+        the undirected graph low→high by (degree, id) — a DAG with small
+        max out-degree — and return (und, k_max, rows, eu, ev) where
+        ``rows`` is the (n+1, k_max) sorted ELL neighbour table padded
+        with the sentinel row ``n`` and (eu, ev) are the oriented edges.
+        Each triangle appears exactly once: as its lowest edge (u, v)
+        with the third corner in N+(u) ∩ N+(v)."""
         und = self._variant("undirected")
         deg = und.out_degrees()
         src = np.repeat(np.arange(und.n, dtype=np.int64),
                         np.diff(und.indptr))
         dst = und.indices.astype(np.int64)
-        # orient low→high (degree, id): DAG with small max out-degree
         key_s = deg[src] * (und.n + 1) + src
         key_d = deg[dst] * (und.n + 1) + dst
         keep = key_s < key_d
@@ -687,6 +711,10 @@ class GraphProcessor:
         eu = np.repeat(np.arange(und.n, dtype=np.int32),
                        np.diff(g_plus.indptr))
         ev = g_plus.indices.astype(np.int32)
+        return und, ell.k_max, rows, eu, ev
+
+    def _minitri(self, chunk: int = 65536) -> Result:
+        und, k_max, rows, eu, ev = self._oriented_edges()
         rows_j = jnp.asarray(rows)
         total = 0
         for i in range(0, len(eu), chunk):
@@ -700,14 +728,49 @@ class GraphProcessor:
         nales = 256.0
         stats = RunStats(
             sweeps=1, converged=True,
-            tile_work=float(e_plus * ell.k_max),
-            edge_work=float(e_plus * max(ell.k_max, 1)),
-            crit_tiles=float(e_plus * ell.k_max) / nales,
+            tile_work=float(e_plus * k_max),
+            edge_work=float(e_plus * max(k_max, 1)),
+            crit_tiles=float(e_plus * k_max) / nales,
             active_group_sweeps=nales, halo_tiles=0.0, total_groups=1,
             mode="oneshot")
         return Result(np.array([total]), stats, None,
                       {"algo": "minitri", "triangles": total,
-                       "oriented_edges": e_plus, "k_max": ell.k_max},
+                       "oriented_edges": e_plus, "k_max": k_max},
+                      policy=None, graph=self.g)
+
+    def _tricount(self, chunk: int = 65536) -> Result:
+        """Per-vertex triangle counts over the same oriented-edge table
+        as MiniTri: for each oriented edge (u, v), every common
+        out-neighbour w closes one triangle — credit u, v, and w."""
+        und, k_max, rows, eu, ev = self._oriented_edges()
+        counts = np.zeros(und.n, dtype=np.int64)
+        # numpy all-pairs matching per edge chunk; K*K comparisons per
+        # edge, chunk sized to bound the (chunk, K, K) mask at ~4M cells
+        kk = max(k_max * k_max, 1)
+        step = max(1, min(chunk, (1 << 22) // kk))
+        for i in range(0, len(eu), step):
+            u, v = eu[i:i + step], ev[i:i + step]
+            a, b = rows[u], rows[v]               # (E, K) neighbour ids
+            m = (a[:, :, None] == b[:, None, :]) & \
+                (a[:, :, None] != und.n)
+            per_edge = m.sum(axis=(1, 2))
+            np.add.at(counts, u, per_edge)
+            np.add.at(counts, v, per_edge)
+            e_idx, i_idx, _ = np.nonzero(m)
+            np.add.at(counts, a[e_idx, i_idx], 1)
+        total = int(counts.sum() // 3)
+        e_plus = len(eu)
+        nales = 256.0
+        stats = RunStats(
+            sweeps=1, converged=True,
+            tile_work=float(e_plus * k_max),
+            edge_work=float(e_plus * max(k_max, 1)),
+            crit_tiles=float(e_plus * k_max) / nales,
+            active_group_sweeps=nales, halo_tiles=0.0, total_groups=1,
+            mode="oneshot")
+        return Result(counts.astype(np.float32), stats, None,
+                      {"algo": "tricount", "triangles": total,
+                       "oriented_edges": e_plus, "k_max": k_max},
                       policy=None, graph=self.g)
 
     # -- DFS: sequential stack machine (worst-case-serial) ---------------

@@ -13,11 +13,12 @@ local_sweeps=k)``):
     reads are always fresh (a value produced by sweep ``s`` feeds sweep
     ``s+1`` immediately — the software analogue of values flowing
     through NALE FIFOs as soon as they are produced), remote reads come
-    from the halo buffered at the start of the round.  For the
-    idempotent, monotone ``relax`` update (min-plus / max-min /
-    min-select) a stale remote value is just a not-yet-improved bound,
-    so the fixpoint is untouched while the collective count drops by up
-    to ``k``.
+    from the halo buffered at the start of the round.  For idempotent,
+    monotone update rules (``semiring.UPDATE_RULES``: the semiring
+    ``relax`` of SSSP/BFS/CC/reachability, k-core peeling, and
+    GraphScale's ``pagerank_delta`` accumulation) a stale remote value
+    is just a not-yet-improved bound, so the fixpoint is untouched while
+    the collective count drops by up to ``k``.
 
   * **Self-timed shard pacing.**  A shard whose local sweep improved
     nothing idles for the rest of the round instead of re-relaxing an
@@ -41,9 +42,11 @@ local_sweeps=k)``):
     the local state is unchanged, hence a quiet boundary pass certifies
     the true bulk-synchronous convergence condition.  Per-query freezing
     matches the sync engine, so converged states are **bit-identical**
-    to the bulk-synchronous path on every mesh factorization (min-plus
-    path sums are associated tail-first in both engines; the fixpoint
-    is a min over the same float multiset).
+    to the bulk-synchronous path on every mesh factorization for the
+    *exact* rules (min-plus path sums are associated tail-first in both
+    engines; the fixpoint is a min over the same float multiset) and
+    tolerance-bounded for accumulation rules like ``pagerank_delta``,
+    whose float-add grouping legitimately differs across schedules.
 
 PIUMA and GraphScale (PAPERS.md) center on the same compute /
 communication overlap; here it is the difference between charging one
@@ -78,23 +81,29 @@ def distributed_async_run_batched(
     Same input layout and padding as the bulk-synchronous engine (both
     run on :func:`placement.shard_batched_inputs`); only the sweep /
     exchange schedule differs, so the converged state is bit-identical
-    while ``DistStats.halo_exchanges`` shrinks toward
-    ``sweeps / local_sweeps``.
+    (exact rules) or tolerance-bounded (accumulation rules) while
+    ``DistStats.halo_exchanges`` shrinks toward ``sweeps /
+    local_sweeps``.
 
-    Only ``apply_kind="relax"`` is supported: the k-local-sweep schedule
-    relies on the update being idempotent and monotone (stale remote
-    values are conservative bounds).  PageRank's damped affine update is
-    neither — it needs the bulk-synchronous flavor.
+    Eligibility comes from the update-rule registry
+    (``semiring.UPDATE_RULES``): the k-local-sweep schedule relies on
+    the rule being idempotent and monotone (stale remote values are
+    conservative bounds).  Classic PageRank's unconditional damped
+    affine sweep is neither — use ``algo="pagerank_delta"`` (the
+    GraphScale delta-accumulating form) or the bulk-synchronous flavor.
     """
     k = int(local_sweeps)
     if k < 1:
         raise ValueError(f"local_sweeps must be >= 1, got {local_sweeps}")
-    if apply_kind != "relax":
+    if not sr.rule(apply_kind).monotone:
+        eligible = sorted(n for n, r in sr.UPDATE_RULES.items()
+                          if r.monotone)
         raise ValueError(
-            "dist_flavor='async' requires the idempotent monotone "
-            f"'relax' update; apply_kind={apply_kind!r} (e.g. PageRank's "
-            "damped affine sweep) is order-sensitive and needs the "
-            "bulk-synchronous distributed engine")
+            "dist_flavor='async' requires an idempotent monotone update "
+            f"rule ({', '.join(repr(e) for e in eligible)}); "
+            f"apply_kind={apply_kind!r} is order-sensitive and needs the "
+            "bulk-synchronous distributed engine (for PageRank, "
+            "algo='pagerank_delta' is the flavor-eligible form)")
     sb = shard_batched_inputs(p, x0, mesh=mesh, query_axis=query_axis)
     Q, d_g, d_q = sb.q, sb.d_g, sb.d_q
     rl = sb.r_pad // d_g            # local rows per "graph" shard

@@ -306,6 +306,22 @@ def _apply(apply_kind: str, ring: sr.Semiring, y, xg, valid_g, damping,
         x_new = (1.0 - damping) * inv_n + damping * y
         x_new = jnp.where(valid_g, x_new, 0.0)
         imp = jnp.abs(x_new - xg) > tol
+    elif apply_kind == "pagerank_delta":
+        # GraphScale's delta form: ranks only RISE (by > tol) from the
+        # (1-d)/n floor toward the fixpoint — conditional assignment
+        # makes the rule idempotent + monotone, so it is safe under
+        # every self-timed schedule (stale y under-estimates the rank).
+        cand = (1.0 - damping) * inv_n + damping * y
+        imp = (cand - xg) > tol
+        x_new = jnp.where(imp, cand, xg)
+    elif apply_kind == "kcore":
+        # membership peeling: y counts live neighbours (plus_times over
+        # unit weights); k rides the damping scalar slot.  Monotone-
+        # decreasing on {0,1} — a vertex dies when its live-degree
+        # drops below k and never revives.
+        alive = (xg > 0.0) & (y >= damping)
+        x_new = jnp.where(alive, xg, 0.0)
+        imp = x_new < xg
     elif apply_kind == "identity":
         x_new = jnp.where(valid_g, y, xg)
         imp = ring.improves(x_new, xg)
@@ -423,7 +439,7 @@ def _sync_loop_fused(vals, cols, nnz, valid, row_edges, row_ext, x0,
     lane = jnp.arange(k)[None, :]
     live = lane < nnz[:, None]
     nnz_f = nnz.astype(jnp.float32)
-    bias = apply_kind in ("pagerank", "identity")
+    bias = sr.rule(apply_kind).bias
     valid_rows = jnp.any(valid, axis=1)
 
     def cond(st):
@@ -510,9 +526,10 @@ def _async_loop(vals, cols, nnz, valid, dangling, group_tiles, group_edges,
     k = cols.shape[1]
     lane = jnp.arange(k)[None, :]
 
-    # apply kinds with a bias term (PageRank's (1-d)/n) must touch every
-    # cluster at least once even if it has no in-edges.
-    first_touch = apply_kind == "pagerank"
+    # apply kinds with a bias term (PageRank's (1-d)/n, k-core's
+    # threshold test) must touch every cluster at least once even if it
+    # has no in-edges (registry: semiring.UPDATE_RULES).
+    first_touch = sr.rule(apply_kind).bias
 
     def sweep_step(carry, sidx):
         x, ch_prev, ch_next, ran, counters = carry

@@ -90,6 +90,38 @@ def cc_oracle(g: Graph) -> np.ndarray:
     return np.array([find(i) for i in range(g.n)])
 
 
+def kcore_oracle(g: Graph, k: int) -> np.ndarray:
+    """k-core membership (1.0 if the vertex survives peeling, else 0.0).
+
+    Classic peeling on the undirected graph: repeatedly delete vertices
+    with fewer than k live neighbours until a fixed point.
+    """
+    und = g.to_undirected()
+    src = np.repeat(np.arange(und.n), np.diff(und.indptr))
+    alive = np.ones(und.n, dtype=bool)
+    while True:
+        cnt = np.zeros(und.n, dtype=np.int64)
+        live_edge = alive[src] & alive[und.indices]
+        np.add.at(cnt, src[live_edge], 1)
+        new = alive & (cnt >= k)
+        if np.array_equal(new, alive):
+            break
+        alive = new
+    return alive.astype(np.float32)
+
+
+def tricount_oracle(g: Graph) -> np.ndarray:
+    """Per-vertex triangle counts (dense adjacency; each triangle
+    contributes 1 to each of its three corners)."""
+    und = g.to_undirected()
+    a = np.zeros((und.n, und.n), dtype=np.int64)
+    src = np.repeat(np.arange(und.n), np.diff(und.indptr))
+    a[src, und.indices] = 1
+    a = np.maximum(a, a.T)
+    np.fill_diagonal(a, 0)
+    return ((a @ a) * a).sum(axis=1) // 2
+
+
 def triangles_oracle(g: Graph) -> int:
     und = g.to_undirected()
     a = np.zeros((und.n, und.n), dtype=np.int64)

@@ -176,9 +176,10 @@ def shard_batched_inputs(p: Prepared, x0: jnp.ndarray,
     x0 = np.concatenate(
         [x0, np.zeros((q_pad - Q,) + x0.shape[1:], x0.dtype)])
     x0 = np.stack([_pad_rows(x0[qi], r_pad) for qi in range(q_pad)])
-    if p.semiring in ("min_plus", "min_select"):
-        # padding rows must not corrupt min-reductions
-        x0[:, p.r_pad:] = np.inf
+    # padding rows hold the ⊕-identity so they never win a reduction
+    # (inf for the min semirings, 0 for plus_times/max_min — the value
+    # np.pad already wrote, so this is a no-op there)
+    x0[:, p.r_pad:] = sr.get(p.semiring).zero
     # padding queries start converged: frozen from sweep 0, zero work
     qlive = np.arange(q_pad) < Q
     return ShardedBatch(mesh=mesh, d_g=d_g, d_q=d_q, r_pad=r_pad,
@@ -201,9 +202,8 @@ def distributed_sync_run(
     nnz = _pad_rows(np.asarray(p.nnz), r_pad)
     valid = _pad_rows(np.asarray(p.valid), r_pad)
     x0 = _pad_rows(np.asarray(x0), r_pad).copy()
-    if p.semiring in ("min_plus", "min_select"):
-        # padding rows must not corrupt min-reductions
-        x0[p.r_pad:] = np.inf
+    # padding rows hold the ⊕-identity so they never win a reduction
+    x0[p.r_pad:] = ring.zero
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     damping = jnp.float32(damping)
     tol = jnp.float32(tol)

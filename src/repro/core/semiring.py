@@ -13,12 +13,31 @@ Semirings implemented (all the paper's six algorithms reduce to these):
   min_plus   : (min,+) — SSSP, BFS-by-level
   max_min    : (max,min) over {0,1} — boolean or_and reachability
   min_select : (min, select-right) — connected-components label propagation
+
+User-defined semirings register through :func:`register`; the reduction
+is a field on the dataclass (with a generic ⊕-fold fallback), so a custom
+ring runs through every engine and the reference kernel without touching
+dispatch code.
+
+This module also hosts the :class:`UpdateRule` registry — the engine-side
+half of an algorithm's identity.  A rule names the apply step (how the
+⊕-reduced neighbourhood value ``y`` combines with the node's current
+value) and carries the two scheduling properties every engine flavor
+keys on:
+
+  bias     — the rule has a constant term (PageRank's (1−d)/n, k-core's
+             threshold test), so every valid row must be touched at
+             least once even when none of its inputs changed.
+  monotone — the update is idempotent and monotone, so a stale input is
+             just a not-yet-improved bound; these rules are eligible for
+             the self-timed schedules (async engine skipping, the
+             distributed ``dist_flavor="async"`` k-local-sweep engine).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,6 +58,11 @@ class Semiring:
       one:       ⊗-identity.
       improves:  strict order test improves(new, old) -> bool array; the
                  "three-state comparator" output used for frontier bits.
+      reduce_fn: the axis-reduction realizing ⊕ over an array (e.g.
+                 ``jnp.sum`` for plus_times).  None falls back to a
+                 generic ⊕-fold of ``add`` — correct for any registered
+                 custom semiring, at the cost of XLA seeing a chain of
+                 binary ops instead of one fused reduction.
     """
 
     name: str
@@ -47,15 +71,27 @@ class Semiring:
     zero: float
     one: float
     improves: Callable[[Array, Array], Array]
+    reduce_fn: Optional[Callable[..., Array]] = None
 
     def reduce(self, x: Array, axis=None) -> Array:
-        if self.name == "plus_times":
-            return jnp.sum(x, axis=axis)
-        if self.name == "min_plus" or self.name == "min_select":
-            return jnp.min(x, axis=axis)
-        if self.name == "max_min":
-            return jnp.max(x, axis=axis)
-        raise ValueError(f"unknown semiring {self.name}")
+        if self.reduce_fn is not None:
+            return self.reduce_fn(x, axis=axis)
+        # generic ⊕-fold: move the reduced axes to one leading axis, then
+        # fold ``add`` over its (static) extent.  Works for any custom
+        # ring whose ``add`` is associative — no name-switch involved.
+        if axis is None:
+            axes = tuple(range(x.ndim))
+        elif isinstance(axis, int):
+            axes = (axis % x.ndim,)
+        else:
+            axes = tuple(a % x.ndim for a in axis)
+        rest = tuple(a for a in range(x.ndim) if a not in axes)
+        t = jnp.transpose(x, axes + rest)
+        t = t.reshape((-1,) + tuple(x.shape[a] for a in rest))
+        out = t[0]
+        for i in range(1, t.shape[0]):
+            out = self.add(out, t[i])
+        return out
 
 
 def _ne(a, b):
@@ -69,6 +105,7 @@ PLUS_TIMES = Semiring(
     zero=0.0,
     one=1.0,
     improves=_ne,
+    reduce_fn=lambda x, axis=None: jnp.sum(x, axis=axis),
 )
 
 MIN_PLUS = Semiring(
@@ -78,6 +115,7 @@ MIN_PLUS = Semiring(
     zero=np.inf,
     one=0.0,
     improves=lambda new, old: new < old,
+    reduce_fn=lambda x, axis=None: jnp.min(x, axis=axis),
 )
 
 MAX_MIN = Semiring(
@@ -87,6 +125,7 @@ MAX_MIN = Semiring(
     zero=0.0,  # valid ⊕-identity for the {0,1} boolean carrier
     one=1.0,
     improves=lambda new, old: new > old,
+    reduce_fn=lambda x, axis=None: jnp.max(x, axis=axis),
 )
 
 # CC label propagation: edge weight is ignored, the neighbour label is
@@ -98,6 +137,7 @@ MIN_SELECT = Semiring(
     zero=np.inf,
     one=0.0,
     improves=lambda new, old: new < old,
+    reduce_fn=lambda x, axis=None: jnp.min(x, axis=axis),
 )
 
 SEMIRINGS = {s.name: s for s in (PLUS_TIMES, MIN_PLUS, MAX_MIN, MIN_SELECT)}
@@ -105,8 +145,100 @@ SEMIRINGS = {s.name: s for s in (PLUS_TIMES, MIN_PLUS, MAX_MIN, MIN_SELECT)}
 SEMIRINGS["or_and"] = MAX_MIN
 
 
+def register(ring: Semiring, overwrite: bool = False) -> Semiring:
+    """Register a user-defined semiring for engine/kernel dispatch.
+
+    Contract: ``mul(zero, x)`` must equal ``zero`` for every ``x`` (the
+    ⊕-identity absorbs, so identity-padded tiles are no-ops without
+    masks) and ``add`` must be associative (the generic reduce folds it
+    in a fixed but unspecified order).
+    """
+    if ring.name in SEMIRINGS and not overwrite:
+        raise ValueError(
+            f"semiring {ring.name!r} is already registered; pass "
+            "overwrite=True to replace it")
+    SEMIRINGS[ring.name] = ring
+    return ring
+
+
 def get(name: str) -> Semiring:
     try:
         return SEMIRINGS[name]
     except KeyError:
         raise ValueError(f"unknown semiring {name!r}; have {sorted(SEMIRINGS)}")
+
+
+# ---------------------------------------------------------------------------
+# update rules — the engine-facing half of an algorithm's identity
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRule:
+    """Scheduling properties of one apply rule (``apply_kind``).
+
+    The arithmetic of a rule lives in ``core/engine._apply`` and its
+    kernel mirror ``kernels/bsr_spmv._apply_rows``; this record is what
+    the *schedulers* consult — no engine string-matches a rule name for
+    anything but the arithmetic branch itself.
+
+    Attributes:
+      name:     the apply_kind identifier.
+      bias:     has a constant term — every valid row must be applied at
+                least once even if none of its inputs ever change (the
+                fused sync loop's sweep-0 all-rows touch, the async
+                engine's first-touch activation).
+      monotone: idempotent + monotone — stale inputs are conservative
+                bounds, so the rule is eligible for self-timed schedules
+                (async cluster skipping, ``dist_flavor="async"``).
+      exact:    schedule-independent at convergence — converged states
+                are bit-identical across engine flavors (vs. tolerance-
+                bounded for accumulation rules, where grouping of float
+                adds differs between schedules).
+    """
+
+    name: str
+    bias: bool
+    monotone: bool
+    exact: bool
+
+
+UPDATE_RULES = {r.name: r for r in (
+    # x' = y ⊕ x: the semiring relaxation (SSSP/BFS/CC/reachability).
+    UpdateRule("relax", bias=False, monotone=True, exact=True),
+    # x' = (1−d)/n + d·y, unconditional: classic damped PageRank sweep.
+    # Order-sensitive (a stale y is not a bound) — sync schedules only.
+    UpdateRule("pagerank", bias=True, monotone=False, exact=False),
+    # x' = max(x, (1−d)/n + d·y): delta-accumulating PageRank
+    # (GraphScale's async formulation).  Starting from x0 = (1−d)/n the
+    # iterates increase monotonically to the same unique fixpoint, and
+    # the conditional assignment makes the rule idempotent — stale reads
+    # are under-estimates, so it is self-timed-eligible.  bias=False:
+    # a row with no in-edges is *born* converged at (1−d)/n.
+    UpdateRule("pagerank_delta", bias=False, monotone=True, exact=False),
+    # x' = x if (x > 0 and y ≥ k) else 0: k-core membership peeling over
+    # unit weights (y counts live neighbours; k rides the damping
+    # scalar slot).  Monotone-decreasing on {0,1} — stale reads over-
+    # estimate liveness, conservatively — and bit-exact everywhere.
+    # bias=True: a vertex with no in-edges must be touched once to die.
+    UpdateRule("kcore", bias=True, monotone=True, exact=True),
+    # x' = y: plain SpMV assignment (debug/diagnostic).
+    UpdateRule("identity", bias=True, monotone=False, exact=False),
+)}
+
+
+def register_rule(r: UpdateRule, overwrite: bool = False) -> UpdateRule:
+    if r.name in UPDATE_RULES and not overwrite:
+        raise ValueError(
+            f"update rule {r.name!r} is already registered; pass "
+            "overwrite=True to replace it")
+    UPDATE_RULES[r.name] = r
+    return r
+
+
+def rule(name: str) -> UpdateRule:
+    try:
+        return UPDATE_RULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown update rule {name!r}; have {sorted(UPDATE_RULES)}")

@@ -195,6 +195,14 @@ def _apply_rows(apply_kind: str, semiring: str, y, xg, vg, damping, inv_n,
         x_new = (1.0 - damping) * inv_n + damping * y
         x_new = jnp.where(vg, x_new, 0.0)
         imp = jnp.abs(x_new - xg) > tol
+    elif apply_kind == "pagerank_delta":
+        cand = (1.0 - damping) * inv_n + damping * y
+        imp = (cand - xg) > tol
+        x_new = jnp.where(imp, cand, xg)
+    elif apply_kind == "kcore":
+        alive = (xg > 0.0) & (y >= damping)
+        x_new = jnp.where(alive, xg, 0.0)
+        imp = x_new < xg
     elif apply_kind == "identity":
         x_new = jnp.where(vg, y, xg)
         imp = _improves(semiring, x_new, xg)

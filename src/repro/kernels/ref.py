@@ -24,7 +24,11 @@ def bsr_spmv_ref(block_vals: jnp.ndarray, block_cols: jnp.ndarray,
       block_cols: (R, K) int32 col-block ids (padding points anywhere; the
         padded tile's values are ⊕-identities so the result is unaffected).
       x: (C, B) input vector in block layout.
-      semiring: plus_times | min_plus | max_min | min_select.
+      semiring: any registered semiring name.  The four built-ins get
+        hand-fused einsum/min/max paths; anything else falls back to the
+        ring's own mul + generic ⊕-reduce (correct for every semiring
+        whose ⊕-identity absorbs under ⊗ — the ``semiring.register``
+        contract).
     Returns:
       y: (R, B).
     """
@@ -41,7 +45,14 @@ def bsr_spmv_ref(block_vals: jnp.ndarray, block_cols: jnp.ndarray,
         # mul(w, x) = x when an edge exists; absent edges hold +inf weight.
         t = jnp.where(jnp.isfinite(block_vals), xs[:, :, None, :], jnp.inf)
         return jnp.min(t, axis=(1, 3))
-    raise ValueError(f"unknown semiring {semiring}")
+    # registered custom semiring: generic ⊗-then-⊕ over the tile and
+    # source axes.  Imported lazily — this runs post-import (kernels/
+    # must not import core/ at module load; core.__init__ → engine →
+    # kernels.ops would cycle).
+    from ..core import semiring as _sr
+    ring = _sr.get(semiring)
+    t = ring.mul(block_vals, xs[:, :, None, :])     # (R, K, B, B)
+    return ring.reduce(t, axis=(1, 3))
 
 
 # ---------------------------------------------------------------------------

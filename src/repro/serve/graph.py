@@ -16,7 +16,8 @@ work (profile → cluster → place → BSR build, Fig. 4) is done once and
   * ``GraphService`` — the front door: a named graph registry
     (``register / get / evict``), direct ``run``, and a ``submit(...) →
     ticket`` / ``gather()`` queue that coalesces same-plan single-source
-    SSSP/BFS requests into one batched vmap run (the slot/wave pattern of
+    requests of coalescible algorithms (``AlgorithmSpec.coalescible``:
+    SSSP/BFS out of the box) into one batched vmap run (the slot/wave pattern of
     ``serve.engine.ServeLoop``, with the query axis playing the slot
     axis).
 
@@ -43,14 +44,26 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from ..core import engine as eng
+from ..core.algorithms import get_algorithm, registered_algorithms
 from ..core.api import (ExecutionPolicy, GraphProcessor, PlanKey, QuerySpec,
                         Result, validate_spec)
 from ..core.engine import Prepared
 from ..core.graph import Graph
 from ..kernels.spec import KernelSpec
 
-# algorithms whose single-source requests can share one batched vmap run
-COALESCIBLE = ("sssp", "bfs")
+
+def _coalescible() -> Tuple[str, ...]:
+    """Algorithms whose single-source requests can share one batched
+    run — declared per-algorithm on the ``AlgorithmSpec`` registry, so
+    user-registered algorithms opt in without touching the serving
+    layer."""
+    return tuple(n for n in registered_algorithms()
+                 if get_algorithm(n).coalescible)
+
+
+# back-compat alias (snapshotted at import; wave_key consults the
+# registry live)
+COALESCIBLE = _coalescible()
 
 
 def _plan_filename(fingerprint: str, key: PlanKey) -> str:
@@ -451,8 +464,9 @@ class GraphService:
         ``TypeError`` for specs that can never execute — at *submit*
         time, so a bad request cannot poison the batch it would have
         ridden in.  Returns ``(name, algo, resolved_policy)`` when the
-        request can share a batched wave (single-source SSSP/BFS — same
-        key ⇒ same plan ⇒ same wave), else ``None`` (run individually).
+        request can share a batched wave (single-source queries of an
+        algorithm whose ``AlgorithmSpec.coalescible`` is set — same key
+        ⇒ same plan ⇒ same wave), else ``None`` (run individually).
         Shared by ``submit``/``gather`` and the background scheduler
         (``serve.sched.WaveScheduler``) so both front doors group
         requests exactly as ``run`` would execute them.
@@ -460,7 +474,7 @@ class GraphService:
         proc = self.get(name)  # fail fast on unknown graphs
         validate_spec(spec)
         pol = proc.resolve_policy(spec)  # surfaces bad params/fields
-        if (spec.algo in COALESCIBLE and not spec.batched
+        if (get_algorithm(spec.algo).coalescible and not spec.batched
                 and len(spec.sources) == 1):
             return (name, spec.algo, pol)
         return None
@@ -481,7 +495,8 @@ class GraphService:
     def gather(self) -> Dict[int, Union[Result, Exception]]:
         """Run everything pending and return ``{ticket: Result}``.
 
-        Single-source SSSP/BFS requests that resolve to the same
+        Single-source requests of coalescible algorithms that resolve to
+        the same
         (graph, algorithm, policy) — hence the same plan — are coalesced
         into batched runs of up to ``max_wave`` sources (waves, as in
         ``ServeLoop``); each ticket gets its own row of the batch.  The
