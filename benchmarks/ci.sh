@@ -7,12 +7,35 @@
 # count=N) so the distributed engines — including the 2-D
 # ("graph", "query") batched mesh — run in-process against a real
 # device grid instead of only via subprocess tests.
+#
+# FAULTS=1 switches to the fault-injection smoke lane: the resilience
+# suite (deterministic FaultPlan seed, REPRO_FAULT_SEED, default 1234)
+# replays injected failures at every registered site and asserts the
+# recovery machinery — retries, the degradation ladder, PlanStore
+# quarantine, the wave watchdog — absorbs them.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 DEVICES="${DEVICES:-1}"
+FAULTS="${FAULTS:-0}"
+
+# pytest-timeout turns a hung wave/retry test into a loud failure
+# instead of a 45-minute lane timeout; the flag is gated so local runs
+# without the plugin still work.
+TIMEOUT_FLAGS=""
+if python -c "import pytest_timeout" >/dev/null 2>&1; then
+    TIMEOUT_FLAGS="--timeout=600 --timeout-method=thread"
+fi
+
+if [ "$FAULTS" = "1" ]; then
+    export REPRO_FAULT_SEED="${REPRO_FAULT_SEED:-1234}"
+    echo "== fault-injection smoke lane (seed ${REPRO_FAULT_SEED}) =="
+    python -m pytest -x -q ${TIMEOUT_FLAGS} tests/test_resilience.py
+    echo "CI OK (fault injection, seed ${REPRO_FAULT_SEED})"
+    exit 0
+fi
 
 if [ "$DEVICES" -gt 1 ]; then
     export XLA_FLAGS="--xla_force_host_platform_device_count=${DEVICES}${XLA_FLAGS:+ ${XLA_FLAGS}}"
@@ -25,9 +48,12 @@ if [ "$DEVICES" -gt 1 ]; then
     # over a real device grid)
     # ... + the algorithm-catalog parity grid (pagerank_delta / cc /
     # kcore / tricount through every engine flavor on the device grid)
-    python -m pytest -x -q tests/test_distribution.py \
+    # ... + the resilience suite (fault sites in the distributed
+    # engines exercise a real device grid here)
+    python -m pytest -x -q ${TIMEOUT_FLAGS} tests/test_distribution.py \
         tests/test_async_dist.py tests/test_api.py \
-        tests/test_graph_server.py tests/test_algorithms.py
+        tests/test_graph_server.py tests/test_algorithms.py \
+        tests/test_resilience.py
     echo "== batched distributed + serve sweep families (${DEVICES} devices) =="
     python -m benchmarks.run --scale 0.002 --json BENCH_multidev.json \
         --skip fig5 fig6 avs kernel lm
@@ -36,7 +62,7 @@ if [ "$DEVICES" -gt 1 ]; then
 fi
 
 echo "== tier-1 pytest =="
-python -m pytest -x -q
+python -m pytest -x -q ${TIMEOUT_FLAGS}
 
 echo "== quickstart smoke (CPU) =="
 python examples/quickstart.py

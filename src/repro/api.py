@@ -39,14 +39,18 @@ from .core.algorithms import (AlgorithmSpec, get_algorithm,  # noqa: F401
                               register_algorithm,
                               registered_algorithms)
 from .core.api import (ExecutionPolicy, GraphProcessor, PlanKey,  # noqa: F401
-                       QuerySpec, Result)
-from .core.engine import (Prepared, RunStats,  # noqa: F401
-                          deserialize_prepared, serialize_prepared)
+                       QuerySpec, Result, degrade_policy)
+from .core.engine import (PlanIntegrityError, Prepared,  # noqa: F401
+                          RunStats, deserialize_prepared,
+                          serialize_prepared)
 from .core.placement import DistStats  # noqa: F401
 from .kernels.spec import KernelSpec  # noqa: F401
+from .resilience import (FaultInjected, FaultPlan, FaultSpec,  # noqa: F401
+                         inject, is_transient)
 from .serve.graph import GraphService, PlanStore  # noqa: F401
 from .serve.sched import (Backpressure, DeadlineExceeded,  # noqa: F401
-                          WavePolicy, WaveScheduler)
+                          ServerClosed, WavePolicy, WaveScheduler,
+                          WaveTimeout)
 from .serve.server import GraphServer  # noqa: F401
 
 __all__ = ["AlgorithmSpec", "ExecutionPolicy", "GraphProcessor",
@@ -54,5 +58,8 @@ __all__ = ["AlgorithmSpec", "ExecutionPolicy", "GraphProcessor",
            "QuerySpec", "Result", "Prepared", "RunStats", "DistStats",
            "serialize_prepared", "deserialize_prepared", "GraphServer",
            "WaveScheduler", "WavePolicy", "DeadlineExceeded",
-           "Backpressure", "get_algorithm", "register_algorithm",
+           "Backpressure", "ServerClosed", "WaveTimeout",
+           "PlanIntegrityError", "degrade_policy", "FaultPlan",
+           "FaultSpec", "FaultInjected", "inject", "is_transient",
+           "get_algorithm", "register_algorithm",
            "registered_algorithms"]

@@ -76,6 +76,17 @@ class ExecutionPolicy:
            "relax" algorithms (SSSP/BFS/CC/reachability).
     local_sweeps:  k, local sweeps per halo exchange; only meaningful
            (and only legal ≠ 1) with ``dist_flavor="async"``.
+    degrade:  graceful-degradation ladder (True by default).  When an
+           engine dispatch fails at run time, ``GraphProcessor.run``
+           retries the query one rung down — a pallas/fused kernel
+           failure re-runs on ``kernel=ref`` (bit-identical values), a
+           distributed dispatch failure falls back to single-device
+           ``mode="sync"`` — recording each step in
+           ``Result.extra["degraded"]``.  API-misuse errors
+           (ValueError/TypeError/KeyError/IndexError) never degrade: a
+           request
+           that can never execute must say so, not silently run
+           something else.  ``degrade=False`` restores fail-fast.
     """
 
     mode: str = "async"
@@ -87,6 +98,7 @@ class ExecutionPolicy:
     dist_flavor: str = "sync"
     local_sweeps: int = 1
     kernel: Optional[KernelSpec] = None
+    degrade: bool = True
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -279,6 +291,40 @@ def validate_spec(spec: QuerySpec) -> None:
             "one spec per source)")
 
 
+def _policy_desc(pol: ExecutionPolicy) -> str:
+    """Short human tag for a degradation step record."""
+    tag = f"{pol.mode}/{pol.kernel.impl}"
+    if pol.kernel.fuse_frontier:
+        tag += "+fused"
+    if pol.mode == "distributed":
+        tag += f"/{pol.dist_flavor}"
+    return tag
+
+
+def degrade_policy(pol: ExecutionPolicy) -> Optional[ExecutionPolicy]:
+    """One rung down the graceful-degradation ladder, or None at the
+    bottom.  Each rung trades the paper's performance machinery for a
+    simpler engine that computes the *same values*:
+
+      1. pallas / fused kernel  →  the ``ref`` kernel (same mode).  The
+         kernel parity suite pins ref and pallas/fused bit-identical, so
+         a degraded result is the healthy result.
+      2. ``mode="distributed"``  →  single-device ``mode="sync"``.  The
+         distributed engines are bit-identical to sync at convergence,
+         so again only the cost changes.
+
+    The ladder only changes *how* a query runs, never what it computes —
+    which is what lets ``GraphProcessor.run`` retry down it behind the
+    caller's back and still honor the bit-identical serving contract.
+    """
+    if pol.kernel is not None and pol.kernel.impl != "ref":
+        return pol.but(kernel=KernelSpec(impl="ref"))
+    if pol.mode == "distributed":
+        return pol.but(mode="sync", dist_flavor="sync", local_sweeps=1,
+                       query_axis=None)
+    return None
+
+
 class GraphProcessor:
     """Prepare-once / query-many session over one graph.
 
@@ -435,12 +481,43 @@ class GraphProcessor:
         return pol
 
     def run(self, spec: QuerySpec) -> Result:
-        """Execute one QuerySpec.  All algorithm methods route here."""
+        """Execute one QuerySpec.  All algorithm methods route here.
+
+        Run-time engine failures walk the graceful-degradation ladder
+        (see :func:`degrade_policy`) while ``policy.degrade`` is set:
+        the query re-executes one rung down, each step recorded in
+        ``Result.extra["degraded"]`` as ``{"from", "to", "error"}``.
+        Errors that mean the request itself is wrong (ValueError /
+        TypeError / KeyError — bad spec, ineligible flavor, missing
+        kernel registration) always propagate: degradation absorbs
+        *infrastructure* failures, not caller mistakes.
+        """
         validate_spec(spec)
         a = get_algorithm(spec.algo)
         pol = self.resolve_policy(spec)
         if a.runner is not None:
             return getattr(self, a.runner)(spec, pol)
+        steps: list = []
+        while True:
+            try:
+                res = self._execute(spec, pol)
+            except (ValueError, TypeError, KeyError, IndexError):
+                raise
+            except Exception as e:
+                nxt = degrade_policy(pol) if pol.degrade else None
+                if nxt is None:
+                    raise
+                steps.append({"from": _policy_desc(pol),
+                              "to": _policy_desc(nxt),
+                              "error": f"{type(e).__name__}: {e}"})
+                pol = nxt
+                continue
+            if steps:
+                res.extra["degraded"] = steps
+            return res
+
+    def _execute(self, spec: QuerySpec, pol: ExecutionPolicy) -> Result:
+        """One engine attempt at (spec, pol) — the pre-ladder ``run``."""
         p, key, x0f, pad, apply_kind, post = self._relaxation_setup(
             spec, pol)
         kern = self._kernel_for_run(p, key, pol.kernel)

@@ -65,6 +65,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import semiring as sr
 from .engine import Prepared, _apply
+from .. import resilience
 from .placement import (DistStats, ShardedBatch,  # noqa: F401 (re-export)
                         _shard_map, _spmv_ref, shard_batched_inputs)
 
@@ -106,6 +107,13 @@ def distributed_async_run_batched(
             "algo='pagerank_delta' is the flavor-eligible form)")
     sb = shard_batched_inputs(p, x0, mesh=mesh, query_axis=query_axis)
     Q, d_g, d_q = sb.q, sb.d_g, sb.d_q
+    # host-level fault sites (after eligibility validation, so real API
+    # misuse still surfaces as ValueError, never as an injected fault):
+    # a straggling shard (delay) and a failed exchange round (raise)
+    resilience.fire("dist.straggler", flavor="async", batched=True,
+                    shards=d_g)
+    resilience.fire("dist.dispatch", flavor="async", batched=True,
+                    shards=d_g)
     rl = sb.r_pad // d_g            # local rows per "graph" shard
     ring = sr.get(p.semiring)
     inv_n = jnp.float32(1.0 / max(p.n, 1))

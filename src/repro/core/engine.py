@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import io
 import json
 from typing import Optional, Tuple
@@ -37,6 +38,7 @@ from .cluster import Clustering, cluster_graph, identity_clustering
 from .graph import Graph, to_bsr
 from ..kernels import ops
 from ..kernels.spec import KernelSpec, as_kernel_spec
+from .. import resilience
 
 
 @dataclasses.dataclass
@@ -167,6 +169,40 @@ jax.tree_util.register_pytree_node(
 
 PREPARED_FORMAT_VERSION = 2  # v2: + row_edges/row_ext (fused-path counters)
 
+# Payload framing: serialized plans carry a content digest so the store
+# can tell a corrupt/truncated disk entry from a healthy one and
+# quarantine-and-rebuild instead of crashing (or worse, loading silently
+# mangled tiles).  Frame = MAGIC + blake2b-128(payload) + payload;
+# pre-framing payloads (no magic) still load, with integrity unknown.
+_PLAN_MAGIC = b"RPLN\x01\x00"
+_PLAN_DIGEST_SIZE = 16
+
+
+class PlanIntegrityError(ValueError):
+    """A framed plan payload failed its checksum — the bytes on disk are
+    not the bytes that were written (bit rot, truncation, torn write)."""
+
+
+def _frame_payload(payload: bytes) -> bytes:
+    digest = hashlib.blake2b(payload,
+                             digest_size=_PLAN_DIGEST_SIZE).digest()
+    return _PLAN_MAGIC + digest + payload
+
+
+def _unframe_payload(data: bytes) -> bytes:
+    if not data.startswith(_PLAN_MAGIC):
+        return data  # legacy unframed payload
+    head = len(_PLAN_MAGIC)
+    digest = data[head:head + _PLAN_DIGEST_SIZE]
+    payload = data[head + _PLAN_DIGEST_SIZE:]
+    want = hashlib.blake2b(payload,
+                           digest_size=_PLAN_DIGEST_SIZE).digest()
+    if digest != want:
+        raise PlanIntegrityError(
+            f"plan payload checksum mismatch ({len(payload)} bytes); "
+            "the disk entry is corrupt — rebuild the plan")
+    return payload
+
 
 def serialize_prepared(p: Prepared) -> bytes:
     """Pack a ``Prepared`` into a self-describing bytes payload."""
@@ -183,12 +219,14 @@ def serialize_prepared(p: Prepared) -> bytes:
     buf = io.BytesIO()
     np.savez(buf, __meta__=np.frombuffer(
         json.dumps(meta).encode(), dtype=np.uint8), **arrays)
-    return buf.getvalue()
+    return _frame_payload(buf.getvalue())
 
 
 def deserialize_prepared(data: bytes) -> Prepared:
     """Rebuild a ``Prepared`` (device arrays re-uploaded) from a payload
-    produced by :func:`serialize_prepared`."""
+    produced by :func:`serialize_prepared`.  Raises
+    ``PlanIntegrityError`` when a framed payload fails its checksum."""
+    data = _unframe_payload(data)
     with np.load(io.BytesIO(data), allow_pickle=False) as z:
         meta = json.loads(z["__meta__"].tobytes().decode())
         if meta["version"] != PREPARED_FORMAT_VERSION:
@@ -494,6 +532,8 @@ def run_sync(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
              changed0: Optional[jnp.ndarray] = None
              ) -> Tuple[jnp.ndarray, RunStats]:
     spec = _resolve_kernel(kernel, impl)
+    resilience.fire("engine.run", mode="sync", impl=spec.impl,
+                    fused=spec.fuse_frontier, batched=False)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     if spec.fuse_frontier:
         if changed0 is None:
@@ -627,6 +667,8 @@ def run_async(p: Prepared, x0: jnp.ndarray, apply_kind: str = "relax",
               changed0: Optional[jnp.ndarray] = None, impl: str = "ref",
               kernel=None) -> Tuple[jnp.ndarray, RunStats]:
     spec = _resolve_kernel(kernel, impl)
+    resilience.fire("engine.run", mode="async", impl=spec.impl,
+                    fused=spec.fuse_frontier, batched=False)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     if changed0 is None:
         changed0 = jnp.ones(p.r_pad, dtype=bool)
@@ -658,6 +700,8 @@ def run_sync_batched(p: Prepared, x0: jnp.ndarray,
                      ) -> Tuple[jnp.ndarray, RunStats]:
     """x0: (Q, r_pad, B) — returns ((Q, r_pad, B), aggregate RunStats)."""
     spec = _resolve_kernel(kernel, impl)
+    resilience.fire("engine.run", mode="sync", impl=spec.impl,
+                    fused=spec.fuse_frontier, batched=True)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
 
     if spec.fuse_frontier:
@@ -694,6 +738,8 @@ def run_async_batched(p: Prepared, x0: jnp.ndarray,
                       ) -> Tuple[jnp.ndarray, RunStats]:
     """x0: (Q, r_pad, B); changed0: optional (Q, r_pad) per-query frontier."""
     spec = _resolve_kernel(kernel, impl)
+    resilience.fire("engine.run", mode="async", impl=spec.impl,
+                    fused=spec.fuse_frontier, batched=True)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     if changed0 is None:
         changed0 = jnp.ones((x0.shape[0], p.r_pad), dtype=bool)

@@ -36,6 +36,7 @@ if _shard_map is None:  # pragma: no cover - version dependent
 
 from . import semiring as sr
 from .engine import Prepared, _apply
+from .. import resilience
 from ..kernels import ops
 from ..kernels.spec import KernelSpec
 
@@ -194,6 +195,13 @@ def distributed_sync_run(
     """Bulk-synchronous distributed engine (shard_map over 'graph')."""
     mesh = mesh or make_graph_mesh()
     d = mesh.shape["graph"]
+    # host-level fault sites: an exchange-round failure (raise) and a
+    # straggling shard (delay) — shard_map bodies are compiled, so the
+    # engine's dispatch boundary is where injection can model them
+    resilience.fire("dist.straggler", flavor="sync", batched=False,
+                    shards=d)
+    resilience.fire("dist.dispatch", flavor="sync", batched=False,
+                    shards=d)
     ring = sr.get(p.semiring)
 
     r_pad = ((p.r_pad + d - 1) // d) * d
@@ -267,6 +275,10 @@ def distributed_sync_run_batched(
     """
     sb = shard_batched_inputs(p, x0, mesh=mesh, query_axis=query_axis)
     Q, d_g, d_q = sb.q, sb.d_g, sb.d_q
+    resilience.fire("dist.straggler", flavor="sync", batched=True,
+                    shards=d_g)
+    resilience.fire("dist.dispatch", flavor="sync", batched=True,
+                    shards=d_g)
     ring = sr.get(p.semiring)
     inv_n = jnp.float32(1.0 / max(p.n, 1))
     damping = jnp.float32(damping)

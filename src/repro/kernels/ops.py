@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .. import resilience
 from .bsr_spmv import bsr_spmv as _bsr_spmv_pallas
 from .bsr_spmv import bsr_spmv_fused as _bsr_spmv_fused
 from .flash_attention import flash_attention as _flash_pallas
@@ -90,8 +91,16 @@ def select_kernel(op: str, spec=None, platform: Optional[str] = None):
     ``spec`` may be a ``KernelSpec``, a bare impl string, or None
     (defaults).  Raises ``KeyError`` naming the available registrations
     when the combination has no kernel.
+
+    Fault site ``kernel.select`` fires here (ctx: op/impl/fused) — the
+    dispatch/trace-time failure the ``ExecutionPolicy`` degradation
+    ladder absorbs by re-running on the ``ref`` kernel.  Note jit
+    caching: engines resolve kernels while tracing, so the site is hit
+    once per (engine, kernel, shape) compilation, not once per query.
     """
     spec = as_kernel_spec(spec)
+    resilience.fire("kernel.select", op=op, impl=spec.impl,
+                    fused=spec.fuse_frontier)
     key = (op, spec.impl, spec.fuse_frontier)
     try:
         builder = _KERNELS[key]

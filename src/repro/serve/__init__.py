@@ -1,11 +1,13 @@
 from .graph import GraphService, PlanStore  # noqa: F401
 from .sched import (Backpressure, DeadlineExceeded,  # noqa: F401
-                    WavePolicy, WaveScheduler)
+                    ServerClosed, WavePolicy, WaveScheduler,
+                    WaveTimeout)
 from .server import GraphServer  # noqa: F401
 
 __all__ = ["ServeLoop", "generate", "GraphService", "PlanStore",
            "GraphServer", "WaveScheduler", "WavePolicy",
-           "DeadlineExceeded", "Backpressure"]
+           "DeadlineExceeded", "Backpressure", "ServerClosed",
+           "WaveTimeout"]
 
 
 def __getattr__(name):

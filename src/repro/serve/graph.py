@@ -38,11 +38,13 @@ import json
 import os
 import threading
 import time
+import warnings
 import zipfile
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from .. import resilience
 from ..core import engine as eng
 from ..core.algorithms import get_algorithm, registered_algorithms
 from ..core.api import (ExecutionPolicy, GraphProcessor, PlanKey, QuerySpec,
@@ -80,6 +82,18 @@ ACCESS_LOG = "plan_access.json"
 # a warm restart reuse tunings instead of re-measuring
 TUNINGS_LOG = "plan_tunings.json"
 _ACCESS_FLUSH_S = 1.0   # throttle: at most one log write per second
+# corrupt cache files are MOVED here (not deleted): evidence survives
+# for postmortems while the live path starts fresh
+QUARANTINE_DIR = "quarantine"
+
+
+def _json_checksum(obj) -> str:
+    """Content digest for the JSON sidecar logs (tunings / access):
+    computed over the canonical serialization of the payload half, so a
+    truncated or hand-mangled file fails loudly at load instead of
+    feeding half a log back into the warm path."""
+    blob = json.dumps(obj, sort_keys=True).encode()
+    return hashlib.blake2b(blob, digest_size=16).hexdigest()
 
 
 def _key_to_json(key: PlanKey) -> dict:
@@ -116,7 +130,7 @@ class PlanStore:
         self._bytes = 0
         self._lock = threading.RLock()
         self._stats = dict(mem_hits=0, disk_hits=0, misses=0, puts=0,
-                           evictions=0, disk_errors=0)
+                           evictions=0, disk_errors=0, quarantined=0)
         # plan access counts (fingerprint → key → lookups), persisted
         # beside the on-disk plan tier so the next process knows which
         # plans are hot before it has served a single query
@@ -171,17 +185,26 @@ class PlanStore:
             # full/read-only cache dir must not fail a query whose plan
             # is already good in memory
             try:
+                resilience.fire("planstore.disk_write", path=path)
                 tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
                 with open(tmp, "wb") as f:
                     f.write(payload)
                 os.replace(tmp, path)  # atomic vs concurrent readers
-            except OSError:
+            except (OSError, resilience.FaultInjected):
                 with self._lock:
                     self._stats["disk_errors"] += 1
 
     def __contains__(self, fp_key: Tuple[str, PlanKey]) -> bool:
         with self._lock:
             return fp_key in self._mem
+
+    def peek(self, fingerprint: str, key: PlanKey) -> Optional[Prepared]:
+        """Memory-tier lookup WITHOUT stats or access accounting — for
+        cost estimation (``GraphService.wave_cost``) and other
+        introspection that must not skew hit rates or the warming log."""
+        with self._lock:
+            ent = self._mem.get((fingerprint, key))
+            return ent[0] if ent is not None else None
 
     # -- internals -------------------------------------------------------
 
@@ -211,7 +234,16 @@ class PlanStore:
             return None
         try:
             with open(path, "rb") as f:
-                return eng.deserialize_prepared(f.read())
+                data = f.read()
+            data = resilience.corrupt_bytes("planstore.disk_read", data,
+                                            path=os.path.basename(path))
+            return eng.deserialize_prepared(data)
+        except eng.PlanIntegrityError as e:
+            # checksum says the bytes rotted: keep the evidence aside,
+            # rebuild the plan from source — a disk-tier entry is a
+            # cache, never the only copy of anything
+            self._quarantine(path, str(e))
+            return None
         except (ValueError, OSError, KeyError, EOFError,
                 zipfile.BadZipFile):
             # stale format / truncated write: drop and rebuild
@@ -220,6 +252,28 @@ class PlanStore:
             except OSError:
                 pass
             return None
+
+    def _quarantine(self, path: str, reason: str) -> None:
+        """Move a corrupt cache file into ``quarantine/`` (best-effort:
+        falls back to deletion), count it, and warn — the live path
+        starts fresh either way."""
+        qdir = os.path.join(self.cache_dir, QUARANTINE_DIR)
+        moved = os.path.join(qdir, f"{os.path.basename(path)}."
+                             f"{os.getpid()}")
+        try:
+            os.makedirs(qdir, exist_ok=True)
+            os.replace(path, moved)
+        except OSError:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+        with self._lock:
+            self._stats["quarantined"] += 1
+        warnings.warn(
+            f"quarantined corrupt plan-store file "
+            f"{os.path.basename(path)!r}: {reason}", RuntimeWarning,
+            stacklevel=3)
 
     # -- measured kernel tunings (autotune records) -----------------------
 
@@ -237,9 +291,10 @@ class PlanStore:
         if not self.cache_dir:
             return
         with self._lock:
-            doc = {"version": 1,
-                   "tunings": [[fp, _key_to_json(k), rec]
-                               for (fp, k), rec in self._tunings.items()]}
+            body = [[fp, _key_to_json(k), rec]
+                    for (fp, k), rec in self._tunings.items()]
+        doc = {"version": 2, "tunings": body,
+               "checksum": _json_checksum(body)}
         path = os.path.join(self.cache_dir, TUNINGS_LOG)
         try:
             tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
@@ -252,17 +307,33 @@ class PlanStore:
 
     def _load_tunings(self) -> None:
         path = os.path.join(self.cache_dir, TUNINGS_LOG)
+        if not os.path.exists(path):
+            return
         try:
             with open(path) as f:
                 doc = json.load(f)
-            if doc.get("version") != 1:
-                return
+            self._check_sidecar(doc, "tunings", (1, 2))
             self._tunings = {
                 (fp, _key_from_json(kd)): rec
                 for fp, kd, rec in doc.get("tunings", [])}
-        except (OSError, ValueError, TypeError, KeyError):
-            # a corrupt tunings log only costs a re-measure
+        except (OSError, ValueError, TypeError, KeyError) as e:
+            # a corrupt tunings log only costs a re-measure — warn,
+            # quarantine the file, start fresh (never raise from the
+            # store constructor)
+            self._quarantine(path, f"{type(e).__name__}: {e}")
             self._tunings = {}
+
+    @staticmethod
+    def _check_sidecar(doc: dict, body_key: str, versions: tuple) -> None:
+        """Validate a JSON sidecar log: known version, and (v2+) the
+        body matches its recorded checksum.  Raises ValueError —
+        callers quarantine and start fresh."""
+        v = doc.get("version")
+        if v not in versions:
+            raise ValueError(f"unknown {body_key} log version {v!r}")
+        if v >= 2 and doc.get("checksum") != _json_checksum(
+                doc.get(body_key, [] if body_key == "tunings" else {})):
+            raise ValueError(f"{body_key} log checksum mismatch")
 
     # -- plan access log (feeds serve.server plan warming) ---------------
 
@@ -295,10 +366,10 @@ class PlanStore:
         with self._lock:
             if not self._access_dirty:
                 return
-            doc = {"version": 1,
-                   "graphs": {fp: [[_key_to_json(k), c]
-                                   for k, c in per.items()]
-                              for fp, per in self._access.items()}}
+            body = {fp: [[_key_to_json(k), c] for k, c in per.items()]
+                    for fp, per in self._access.items()}
+            doc = {"version": 2, "graphs": body,
+                   "checksum": _json_checksum(body)}
             self._access_dirty = False
             self._access_flushed = time.monotonic()
         path = os.path.join(self.cache_dir, ACCESS_LOG)
@@ -313,16 +384,18 @@ class PlanStore:
 
     def _load_access_log(self) -> None:
         path = os.path.join(self.cache_dir, ACCESS_LOG)
+        if not os.path.exists(path):
+            return
         try:
             with open(path) as f:
                 doc = json.load(f)
-            if doc.get("version") != 1:
-                return
+            self._check_sidecar(doc, "graphs", (1, 2))
             self._access = {
                 fp: {_key_from_json(kd): int(c) for kd, c in per}
                 for fp, per in doc.get("graphs", {}).items()}
-        except (OSError, ValueError, TypeError, KeyError):
+        except (OSError, ValueError, TypeError, KeyError) as e:
             # a corrupt log only costs warming, never correctness
+            self._quarantine(path, f"{type(e).__name__}: {e}")
             self._access = {}
 
     # -- introspection ---------------------------------------------------
@@ -382,6 +455,7 @@ class GraphService:
         self._lock = threading.RLock()
         self._coalesced_queries = 0
         self._batched_runs = 0
+        self._degraded_runs = 0
 
     # -- graph registry --------------------------------------------------
 
@@ -453,7 +527,31 @@ class GraphService:
     # -- direct execution ------------------------------------------------
 
     def run(self, name: str, spec: QuerySpec) -> Result:
-        return self.get(name).run(spec)
+        return self._note_result(self.get(name).run(spec))
+
+    def _note_result(self, res: Result) -> Result:
+        """Service-level accounting on a completed run (degradation
+        ladder outcomes — ``stats()['degraded_runs']``)."""
+        if "degraded" in res.extra:
+            with self._lock:
+                self._degraded_runs += 1
+        return res
+
+    def wave_cost(self, name: str, algo: str, pol: ExecutionPolicy,
+                  rows: int = 1) -> float:
+        """Relative cost estimate for one wave: plan tiles × sweep bound
+        × rows.  Uses the cached plan when one is resident (``peek`` —
+        no store-stats noise), else falls back to the graph's nnz.  The
+        scheduler's watchdog scales its per-wave deadline by this, so
+        big graphs aren't reaped on the schedule of small ones."""
+        proc = self.get(name)
+        a = get_algorithm(algo)
+        pk = proc.plan_key(a.semiring, variant=a.variant, pull=a.pull,
+                           normalize=a.normalize)
+        p = self.store.peek(proc.g.fingerprint(), pk)
+        tiles = float(p.tiles_total) if p is not None \
+            else float(proc.g.nnz)
+        return tiles * max(int(pol.max_sweeps), 1) * max(int(rows), 1)
 
     # -- coalescing front door -------------------------------------------
 
@@ -572,11 +670,13 @@ class GraphService:
             try:
                 if len(wave) == 1:
                     q = wave[0]
-                    results[q.ticket] = proc.run(q.spec)
+                    results[q.ticket] = self._note_result(
+                        proc.run(q.spec))
                     continue
                 sources = tuple(q.spec.sources[0] for q in wave)
-                batch = proc.run(QuerySpec(algo=algo, sources=sources,
-                                           batched=True, policy=pol))
+                batch = self._note_result(
+                    proc.run(QuerySpec(algo=algo, sources=sources,
+                                       batched=True, policy=pol)))
             except Exception as e:
                 for q in wave:
                     results[q.ticket] = e
@@ -587,7 +687,7 @@ class GraphService:
             for row, q in enumerate(wave):
                 extra = {"algo": algo, "src": sources[row],
                          "coalesced": len(wave)}
-                for k in ("dist", "batched_fallback"):
+                for k in ("dist", "batched_fallback", "degraded"):
                     # distributed waves: surface the engine's mesh
                     # factorization / per-query sweeps per ticket
                     if k in batch.extra:
@@ -609,4 +709,5 @@ class GraphService:
                     "pending": len(self._pending),
                     "coalesced_queries": self._coalesced_queries,
                     "batched_runs": self._batched_runs,
+                    "degraded_runs": self._degraded_runs,
                     "plan_store": self.store.stats()}

@@ -18,7 +18,11 @@ concurrent clients, which is what "millions of users" actually send:
   * plan warming — ``register()`` consults the access log the store
     persists beside its on-disk plan tier and speculatively prepares
     the graph's hot plans in the background, so a restarted server is
-    warm before its first request.
+    warm before its first request;
+  * self-healing — transient wave failures retry with exponential
+    backoff, a watchdog reaps hung dispatches, and ``close`` /
+    ``submit`` on a closed server resolve with a structured
+    ``ServerClosed`` (see ``serve.sched`` and ``repro.resilience``).
 
     server = GraphServer(cache_dir="~/.cache/repro-plans")
     server.register("roads", g, b=16, num_clusters=64)
@@ -40,7 +44,8 @@ from typing import List, Optional
 from ..core.api import QuerySpec, Result
 from ..core.graph import Graph
 from .graph import GraphService
-from .sched import Backpressure, WavePolicy, WaveScheduler, _Request
+from .sched import (Backpressure, ServerClosed, WavePolicy,
+                    WaveScheduler, _Request)
 
 
 class GraphServer:
@@ -193,7 +198,7 @@ class GraphServer:
         ``Backpressure`` when admission control refuses new load.
         """
         if self._closed:
-            raise RuntimeError("GraphServer is closed")
+            raise ServerClosed("GraphServer is closed")
         queued = self.sched.pending()
         if queued >= self.wave.max_pending:
             with self._lock:

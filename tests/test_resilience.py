@@ -1,0 +1,493 @@
+"""Fault injection + self-healing serving: the recovery machinery is
+tested against the exact failures it claims to absorb.
+
+Every fault here is DETERMINISTIC (``FaultPlan`` seed, default 1234,
+override with ``REPRO_FAULT_SEED``) — CI replays the identical fault
+sequence.  The load-bearing invariant throughout: with faults injected
+at every site, every submitted request still resolves — bit-identical
+to the fault-free run after degradation/retry, or with a structured
+error — and ``stats()`` reports what the machinery absorbed."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro import resilience as rz
+from repro.core import engine as eng
+from repro.core import graph as G
+from repro.serve.graph import QUARANTINE_DIR, TUNINGS_LOG
+
+SEED = int(os.environ.get("REPRO_FAULT_SEED", "1234"))
+
+
+@pytest.fixture(scope="module")
+def road():
+    return G.road_network(10, seed=1)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    # a test that fails mid-``inject`` must not poison its neighbors
+    rz.uninstall()
+
+
+def sssp(s):
+    return api.QuerySpec(algo="sssp", sources=(s,))
+
+
+def fplan(*specs, seed=SEED):
+    return rz.FaultPlan(specs, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# the harness itself
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_injection_is_a_noop():
+    assert rz.active() is None
+    rz.fire("sched.dispatch", size=3)       # no plan: must not raise
+    data = b"payload-bytes"
+    assert rz.corrupt_bytes("planstore.disk_read", data) is data
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        rz.FaultSpec("not.a.site")
+    with pytest.raises(ValueError, match="mode"):
+        rz.FaultSpec("engine.run", mode="explode")
+    with pytest.raises(ValueError, match="p must be"):
+        rz.FaultSpec("engine.run", p=1.5)
+    with pytest.raises(ValueError, match="exc"):
+        rz.FaultSpec("engine.run", exc="valueerror")
+
+
+def test_plan_is_deterministic_per_seed():
+    def pattern(seed):
+        plan = fplan(rz.FaultSpec("engine.run", p=0.5), seed=seed)
+        fired = []
+        with rz.inject(plan):
+            for _ in range(64):
+                try:
+                    rz.fire("engine.run")
+                    fired.append(0)
+                except rz.FaultInjected:
+                    fired.append(1)
+        return fired
+
+    assert pattern(SEED) == pattern(SEED)
+    assert pattern(SEED) != pattern(SEED + 1)   # and the seed matters
+    assert sum(pattern(SEED)) > 0
+
+
+def test_count_after_and_where_filters():
+    plan = fplan(rz.FaultSpec("kernel.select", count=1, after=1,
+                              where={"impl": "pallas"}))
+    with rz.inject(plan):
+        rz.fire("kernel.select", impl="ref")       # filtered by where
+        rz.fire("kernel.select", impl="pallas")    # skipped by after
+        with pytest.raises(rz.FaultInjected):
+            rz.fire("kernel.select", impl="pallas")
+        rz.fire("kernel.select", impl="pallas")    # count exhausted
+    st = plan.stats()["kernel.select"]
+    assert st == {"hits": 4, "injected": 1}
+
+
+def test_transient_taxonomy():
+    assert rz.is_transient(rz.FaultInjected("x"))
+    assert rz.is_transient(api.WaveTimeout("x"))
+    assert not rz.is_transient(RuntimeError("x"))
+    assert not rz.is_transient(ValueError("x"))
+
+
+def test_install_is_exclusive():
+    plan = fplan(rz.FaultSpec("engine.run"))
+    with rz.inject(plan):
+        with pytest.raises(RuntimeError, match="already installed"):
+            rz.install(fplan(rz.FaultSpec("engine.run")))
+    assert rz.active() is None
+
+
+# ---------------------------------------------------------------------------
+# plan payload integrity (checksummed framing)
+# ---------------------------------------------------------------------------
+
+
+def test_serialized_plan_roundtrip_and_checksum(road):
+    p = eng.prepare(road, "min_plus", b=16)
+    blob = api.serialize_prepared(p)
+    q = api.deserialize_prepared(blob)
+    np.testing.assert_array_equal(np.asarray(p.cols),
+                                  np.asarray(q.cols))
+    # one flipped byte in the payload is caught by the digest
+    pos = len(blob) // 2
+    bad = blob[:pos] + bytes([blob[pos] ^ 0xFF]) + blob[pos + 1:]
+    with pytest.raises(eng.PlanIntegrityError, match="checksum"):
+        api.deserialize_prepared(bad)
+
+
+def test_legacy_unframed_payloads_still_load(road):
+    p = eng.prepare(road, "min_plus", b=16)
+    framed = api.serialize_prepared(p)
+    legacy = framed[len(eng._PLAN_MAGIC) + eng._PLAN_DIGEST_SIZE:]
+    q = api.deserialize_prepared(legacy)    # pre-checksum disk tiers
+    np.testing.assert_array_equal(np.asarray(p.vals),
+                                  np.asarray(q.vals))
+
+
+def test_corrupt_disk_plan_quarantined_and_rebuilt(road, tmp_path):
+    d = str(tmp_path)
+    svc = api.GraphService(cache_dir=d)
+    svc.register("g", road, b=16)
+    base = svc.run("g", sssp(0))
+
+    svc2 = api.GraphService(cache_dir=d)    # cold restart, corrupt read
+    svc2.register("g", road, b=16)
+    plan = fplan(rz.FaultSpec("planstore.disk_read", mode="corrupt"))
+    with rz.inject(plan):
+        r = svc2.run("g", sssp(0))
+    assert plan.stats()["planstore.disk_read"]["injected"] >= 1
+    np.testing.assert_array_equal(np.asarray(r.values),
+                                  np.asarray(base.values))
+    st = svc2.stats()["plan_store"]
+    assert st["quarantined"] >= 1
+    qdir = os.path.join(d, QUARANTINE_DIR)
+    assert os.path.isdir(qdir) and len(os.listdir(qdir)) >= 1
+
+
+def test_disk_write_failure_stays_best_effort(road, tmp_path):
+    svc = api.GraphService(cache_dir=str(tmp_path))
+    svc.register("g", road, b=16)
+    plan = fplan(rz.FaultSpec("planstore.disk_write", exc="oserror"))
+    with rz.inject(plan):
+        r = svc.run("g", sssp(0))           # query succeeds anyway
+    assert r.values.shape == (road.n,)
+    assert svc.stats()["plan_store"]["disk_errors"] >= 1
+
+
+def test_corrupt_sidecar_logs_warn_quarantine_start_fresh(road, tmp_path):
+    d = str(tmp_path)
+    (tmp_path / TUNINGS_LOG).write_text('{"version": 2, "tunings": [[')
+    (tmp_path / "plan_access.json").write_text("garbage{{{")
+    with pytest.warns(RuntimeWarning, match="quarantined corrupt"):
+        svc = api.GraphService(cache_dir=d)     # must NOT raise
+    svc.register("g", road, b=16)
+    assert svc.run("g", sssp(0)).values.shape == (road.n,)
+    assert svc.stats()["plan_store"]["quarantined"] == 2
+    assert len(os.listdir(os.path.join(d, QUARANTINE_DIR))) == 2
+
+
+def test_tampered_checksum_detected(road, tmp_path):
+    import json
+    d = str(tmp_path)
+    svc = api.GraphService(cache_dir=d)
+    svc.register("g", road, b=16)
+    svc.run("g", sssp(0))
+    svc.store._flush_tunings()
+    path = tmp_path / TUNINGS_LOG
+    doc = json.loads(path.read_text())
+    assert doc["version"] == 2 and "checksum" in doc
+    doc["checksum"] = "0" * 32                  # silent bit-rot stand-in
+    path.write_text(json.dumps(doc))
+    with pytest.warns(RuntimeWarning, match="checksum mismatch"):
+        api.GraphService(cache_dir=d)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_policy_ladder_shape():
+    pallas = api.ExecutionPolicy(kernel=api.KernelSpec(impl="pallas"))
+    rung1 = api.degrade_policy(pallas)
+    assert rung1.kernel.impl == "ref"
+    dist = api.ExecutionPolicy(mode="distributed", dist_flavor="async")
+    rung2 = api.degrade_policy(dist)
+    assert rung2.mode == "sync"
+    floor = api.ExecutionPolicy()               # sync + ref: no net
+    assert api.degrade_policy(floor) is None
+
+
+def test_kernel_fault_degrades_to_ref_bit_identical(road):
+    proc = api.GraphProcessor(road, b=16)
+    base = proc.run(sssp(0))
+    pallas = api.ExecutionPolicy(kernel=api.KernelSpec(impl="pallas"))
+    plan = fplan(rz.FaultSpec("kernel.select",
+                              where={"impl": "pallas"}))
+    with rz.inject(plan):
+        r = proc.run(api.QuerySpec(algo="sssp", sources=(0,),
+                                   policy=pallas))
+    np.testing.assert_array_equal(np.asarray(r.values),
+                                  np.asarray(base.values))
+    steps = r.extra["degraded"]
+    assert len(steps) == 1 and "FaultInjected" in steps[0]["error"]
+    assert "/pallas" in steps[0]["from"] and "/ref" in steps[0]["to"]
+
+
+def test_distributed_fault_falls_back_to_single_device_sync(road):
+    proc = api.GraphProcessor(road, b=16)
+    base = proc.run(sssp(0))
+    dist = api.ExecutionPolicy(mode="distributed")
+    plan = fplan(rz.FaultSpec("dist.dispatch"))
+    with rz.inject(plan):
+        r = proc.run(api.QuerySpec(algo="sssp", sources=(0,),
+                                   policy=dist))
+    np.testing.assert_array_equal(np.asarray(r.values),
+                                  np.asarray(base.values))
+    assert [s["from"].split("/")[0] for s in r.extra["degraded"]] \
+        == ["distributed"]
+
+
+def test_degrade_false_propagates_the_fault(road):
+    proc = api.GraphProcessor(road, b=16)
+    hard = api.ExecutionPolicy(kernel=api.KernelSpec(impl="pallas"),
+                               degrade=False)
+    with rz.inject(fplan(rz.FaultSpec("kernel.select"))):
+        with pytest.raises(rz.FaultInjected):
+            proc.run(api.QuerySpec(algo="sssp", sources=(0,),
+                                   policy=hard))
+
+
+def test_misuse_errors_never_degrade(road):
+    # a bad request fails identically on every rung — degrading would
+    # just mask the caller's bug behind N slower failures
+    proc = api.GraphProcessor(road, b=16)
+    with pytest.raises(IndexError):
+        proc.run(api.QuerySpec(algo="sssp", sources=(road.n + 7,)))
+    with pytest.raises(ValueError):
+        proc.run(api.QuerySpec(algo="nope", sources=(0,)))
+
+
+def test_service_counts_degraded_runs(road):
+    svc = api.GraphService()
+    svc.register("g", road, b=16)
+    pallas = api.ExecutionPolicy(kernel=api.KernelSpec(impl="pallas"))
+    with rz.inject(fplan(rz.FaultSpec("kernel.select", count=1,
+                                      where={"impl": "pallas"}))):
+        svc.run("g", api.QuerySpec(algo="sssp", sources=(0,),
+                                   policy=pallas))
+    assert svc.stats()["degraded_runs"] == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler self-healing: retries, watchdog, structured shutdown
+# ---------------------------------------------------------------------------
+
+
+def server(road, **wave_kw):
+    wave = api.WavePolicy(**{"max_wait_s": 0.002,
+                             "backoff_base_s": 0.01, **wave_kw})
+    srv = api.GraphServer(wave=wave)
+    srv.register("g", road, b=16, warm=False)
+    return srv
+
+
+def test_transient_wave_failure_retried_to_success(road):
+    with server(road) as srv:
+        base = srv.run("g", sssp(0))
+        plan = fplan(rz.FaultSpec("sched.dispatch", count=1))
+        with rz.inject(plan):
+            r = srv.run("g", sssp(0))
+        np.testing.assert_array_equal(np.asarray(r.values),
+                                      np.asarray(base.values))
+        st = srv.stats()["scheduler"]
+        assert st["retries"] == 1 and st["failed"] == 0
+        assert st["retry_exhausted"] == 0
+
+
+def test_retry_budget_exhaustion_is_a_structured_failure(road):
+    with server(road) as srv:
+        with rz.inject(fplan(rz.FaultSpec("sched.dispatch"))):
+            fut = srv.submit("g", sssp(0))
+            with pytest.raises(rz.FaultInjected):
+                fut.result(timeout=60)
+        st = srv.stats()["scheduler"]
+        assert st["retry_exhausted"] == 1 and st["failed"] == 1
+        # initial attempt + max_retries re-dispatches
+        assert st["retries"] == api.WavePolicy().max_retries
+
+
+def test_deterministic_failures_are_never_retried(road):
+    with server(road) as srv:
+        real = srv.service.run
+        calls = []
+
+        def boom(name, spec):
+            calls.append(name)
+            raise RuntimeError("deterministic bug")
+
+        srv.service.run = boom
+        try:
+            fut = srv.submit("g", api.QuerySpec(algo="pagerank"))
+            with pytest.raises(RuntimeError, match="deterministic"):
+                fut.result(timeout=60)
+        finally:
+            srv.service.run = real
+        assert len(calls) == 1
+        assert srv.stats()["scheduler"]["retries"] == 0
+
+
+def test_watchdog_reaps_hung_wave_and_retry_succeeds(road):
+    with server(road, watchdog_s=0.3) as srv:
+        base = srv.run("g", sssp(0))
+        plan = fplan(rz.FaultSpec("sched.dispatch", mode="delay",
+                                  delay_s=10.0, count=1))
+        with rz.inject(plan):
+            r = srv.run("g", sssp(0))
+        np.testing.assert_array_equal(np.asarray(r.values),
+                                      np.asarray(base.values))
+        st = srv.stats()["scheduler"]
+        assert st["watchdog_timeouts"] == 1 and st["retries"] == 1
+
+
+def test_watchdog_timeout_exhausts_to_wave_timeout(road):
+    with server(road, watchdog_s=0.2, max_retries=0) as srv:
+        plan = fplan(rz.FaultSpec("sched.dispatch", mode="delay",
+                                  delay_s=10.0, count=1))
+        with rz.inject(plan):
+            fut = srv.submit("g", sssp(0))
+            with pytest.raises(api.WaveTimeout):
+                fut.result(timeout=60)
+        assert srv.stats()["scheduler"]["watchdog_timeouts"] == 1
+
+
+def test_stop_without_drain_resolves_queue_with_server_closed(road):
+    srv = api.GraphServer(autostart=False)   # paused: queue accumulates
+    srv.register("g", road, b=16, warm=False)
+    futs = [srv.submit("g", sssp(s)) for s in (0, 1, 2)]
+    srv.close(drain=False)
+    for f in futs:
+        with pytest.raises(api.ServerClosed) as ei:
+            f.result(timeout=10)
+        assert isinstance(ei.value, api.Backpressure)   # structured
+        assert isinstance(ei.value.stats, dict)
+    with pytest.raises(api.ServerClosed, match="closed"):
+        srv.submit("g", sssp(0))
+
+
+def test_offer_after_stop_resolves_immediately(road):
+    from concurrent.futures import Future
+
+    from repro.serve.sched import _Request
+    srv = api.GraphServer(autostart=False)
+    srv.register("g", road, b=16, warm=False)
+    srv.close(drain=False)
+    fut = Future()
+    srv.sched.offer(_Request(ticket=0, name="g", spec=sssp(0), key=None,
+                             future=fut, t_submit=time.monotonic(),
+                             t_deadline=None))
+    with pytest.raises(api.ServerClosed):
+        fut.result(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# stress: concurrent register / evict / submit (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_register_evict_submit_no_orphans(road):
+    """Hammer one server from register/evict/submit threads: no
+    deadlock, and EVERY submitted future resolves (a Result or a
+    structured KeyError/Backpressure) — no orphans."""
+    small = G.road_network(6, seed=2)
+    with server(road, max_wait_s=0.001) as srv:
+        stop_evt = threading.Event()
+        futs, errs = [], []
+        lock = threading.Lock()
+
+        def churn():     # register/evict a second graph in a loop
+            while not stop_evt.is_set():
+                try:
+                    srv.register("churn", small, b=8, warm=False)
+                    time.sleep(0.002)
+                    srv.evict("churn")
+                except Exception as e:  # pragma: no cover
+                    errs.append(e)
+
+        def submitter(i):
+            for k in range(20):
+                name = "churn" if (i + k) % 3 == 0 else "g"
+                try:
+                    f = srv.submit(name, sssp(k % road.n
+                                              if name == "g" else 0))
+                except (KeyError, api.Backpressure):
+                    continue     # evicted that instant / queue full
+                with lock:
+                    futs.append(f)
+
+        threads = [threading.Thread(target=churn)] + \
+            [threading.Thread(target=submitter, args=(i,))
+             for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads[1:]:
+            t.join(timeout=120)
+        stop_evt.set()
+        threads[0].join(timeout=30)
+        assert not any(t.is_alive() for t in threads)
+        assert not errs
+        base = np.asarray(srv.run("g", sssp(0)).values)
+        for f in futs:
+            try:
+                r = f.result(timeout=60)    # every future resolves
+            except (KeyError, api.Backpressure, api.DeadlineExceeded):
+                continue                    # structured, acceptable
+            if r.extra.get("src") == 0 and r.graph is road:
+                np.testing.assert_array_equal(np.asarray(r.values),
+                                              base)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance story: faults at every site, every request resolves
+# ---------------------------------------------------------------------------
+
+
+def test_multi_site_faults_every_request_resolves(road, tmp_path):
+    srv = api.GraphServer(cache_dir=str(tmp_path),
+                          wave=api.WavePolicy(max_wait_s=0.002,
+                                              backoff_base_s=0.01,
+                                              watchdog_s=2.0))
+    srv.register("g", road, b=16, warm=False)
+    base = {s: np.asarray(srv.run("g", sssp(s)).values)
+            for s in range(4)}
+    plan = fplan(
+        rz.FaultSpec("planstore.disk_read", mode="corrupt", p=0.5),
+        rz.FaultSpec("planstore.disk_write", exc="oserror", p=0.5),
+        rz.FaultSpec("kernel.select", count=1,
+                     where={"impl": "pallas"}),
+        rz.FaultSpec("sched.dispatch", p=0.3, count=3),
+        rz.FaultSpec("sched.dispatch", mode="delay", delay_s=5.0,
+                     count=1, after=1),
+    )
+    pallas = api.ExecutionPolicy(kernel=api.KernelSpec(impl="pallas"))
+    with rz.inject(plan):
+        futs = {}
+        for rep in range(3):
+            for s in range(4):
+                spec = api.QuerySpec(algo="sssp", sources=(s,),
+                                     policy=pallas if s == 0 else None)
+                futs[(rep, s)] = srv.submit("g", spec)
+        outcomes = {"ok": 0, "err": 0}
+        for (rep, s), f in futs.items():
+            try:
+                r = f.result(timeout=120)   # EVERY future resolves
+            except (rz.FaultInjected, api.WaveTimeout, OSError,
+                    api.Backpressure):
+                outcomes["err"] += 1        # structured, transient
+                continue
+            outcomes["ok"] += 1             # …or bit-identical
+            np.testing.assert_array_equal(np.asarray(r.values),
+                                          base[s])
+    srv.close()
+    fired = plan.stats()
+    assert fired.get("sched.dispatch", {}).get("injected", 0) >= 1
+    assert outcomes["ok"] >= 1
+    sched = srv.stats()["scheduler"]
+    assert sched["completed"] + sched["failed"] >= len(futs)
+    assert sched["retries"] >= 1
